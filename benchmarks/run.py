@@ -1,0 +1,144 @@
+"""Benchmark harness — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only gpp_journey
+
+Prints `name,us_per_call,derived` CSV rows per the repo contract.
+
+Tables:
+  table1_gpp_journey   — paper Table I: v0..v8 (CPU wall-clock at BENCH size
+                         + modeled v5e TFLOP/s at Si-214/Si-510)
+  fig_roofline_terms   — paper Figs 1/3/5/6: hierarchical terms per version
+  fig8_locality        — paper Fig 8: HBM bytes per version (locality)
+  v8_block_sweep       — the v8 tuning sweep (paper Sec. III-v8)
+  model_cells          — the 40-cell dry-run roofline table (reads
+                         runs/dryrun/*.json written by launch/dryrun.py)
+  train_step_cpu       — measured wall-time of a reduced-config train step
+                         per architecture (the CPU-executable signal)
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import time
+
+HERE = os.path.dirname(__file__)
+RUNS = os.path.join(HERE, "..", "runs", "dryrun")
+
+
+def _csv(name, us, derived):
+    print(f"{name},{us if us is not None else ''},{derived}")
+
+
+def table1_gpp_journey():
+    from repro.core.journey import FLOP_PEAK, format_journey, run_journey
+    for size in ("si214", "si510"):
+        rows = run_journey(size, measure_cpu=(size == "si214"),
+                           verbose=False)
+        for r in rows:
+            us = r.cpu_ms * 1e3 if r.cpu_ms else None
+            _csv(f"gpp_{size}_{r.version}", us,
+                 f"modeled_tflops={r.modeled_tflops:.3f};"
+                 f"pct_vpu_peak={r.modeled_tflops*1e12/FLOP_PEAK:.3f};"
+                 f"step_s={r.report.modeled_step_s:.4f}")
+        v0, v8 = rows[0], rows[-1]
+        _csv(f"gpp_{size}_speedup_v8_over_v0", None,
+             f"{v0.report.modeled_step_s / v8.report.modeled_step_s:.3f}x"
+             f" (paper: {'2.36x' if size == 'si214' else '3.27x'})")
+
+
+def fig_roofline_terms():
+    from repro.core.journey import run_journey
+    rows = run_journey("si214", measure_cpu=False, verbose=False)
+    for r in rows:
+        rep = r.report
+        _csv(f"roofline_{r.version}", None,
+             f"compute_s={rep.compute_s:.4f};memory_s={rep.memory_s:.5f};"
+             f"dominant={rep.dominant}")
+
+
+def fig8_locality():
+    from repro.core.journey import run_journey
+    rows = run_journey("si214", measure_cpu=False, verbose=False)
+    base = rows[0].report.bytes_per_chip
+    for r in rows:
+        rep = r.report
+        _csv(f"hbm_bytes_{r.version}", None,
+             f"gib={rep.bytes_per_chip/2**30:.2f};"
+             f"vs_v0={rep.bytes_per_chip/base:.3f}")
+
+
+def v8_block_sweep():
+    from repro.core.journey import sweep_blocks
+    for row in sweep_blocks("si214")[:8]:
+        _csv(f"sweep_ig{row['blk_ig']}_igp{row['blk_igp']}_b{row['blk_band']}",
+             None, f"modeled_s={row['modeled_s']:.4f};"
+             f"tflops={row['tflops']:.3f};vmem_mib={row['vmem_mib']:.1f}")
+
+
+def model_cells():
+    files = sorted(glob.glob(os.path.join(RUNS, "*__single.json")))
+    if not files:
+        _csv("model_cells", None, "no dry-run artifacts (run launch.dryrun)")
+        return
+    for f in files:
+        r = json.load(open(f))
+        _csv(f"cell_{r['name'].replace('/', '_')}", None,
+             f"step_s={r['step_s']:.4g};dominant={r['dominant']};"
+             f"roofline={r['roofline_frac']:.3f};"
+             f"mem_gib={r.get('hbm_adjusted_gib', 0):.2f};"
+             f"fits={r['fits_hbm']}")
+
+
+def train_step_cpu():
+    import jax
+    from repro.configs.base import ARCH_IDS, get_config, reduce_config
+    from repro.models.registry import build_model
+    for arch in ARCH_IDS:
+        cfg = reduce_config(get_config(arch))
+        model = build_model(cfg)
+        rng = jax.random.PRNGKey(0)
+        params = model.init_params(rng)
+        batch = {"tokens": jax.random.randint(rng, (2, 64), 0, cfg.vocab_size),
+                 "labels": jax.random.randint(rng, (2, 64), 0, cfg.vocab_size)}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.numpy.zeros((2, cfg.enc_seq, cfg.d_model),
+                                              jax.numpy.bfloat16)
+        if cfg.family == "vlm":
+            batch["vis"] = jax.numpy.zeros((2, cfg.n_vis_tokens, cfg.d_model),
+                                           jax.numpy.bfloat16)
+        fn = jax.jit(jax.grad(lambda p: model.loss_fn(p, batch)[0]))
+        g = fn(params)
+        jax.block_until_ready(g)
+        t0 = time.perf_counter()
+        g = fn(params)
+        jax.block_until_ready(g)
+        dt = time.perf_counter() - t0
+        _csv(f"train_step_{arch}", dt * 1e6, "reduced-config fwd+bwd on CPU")
+
+
+TABLES = {
+    "gpp_journey": table1_gpp_journey,
+    "roofline_terms": fig_roofline_terms,
+    "fig8_locality": fig8_locality,
+    "v8_block_sweep": v8_block_sweep,
+    "model_cells": model_cells,
+    "train_step_cpu": train_step_cpu,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(TABLES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    todo = [args.only] if args.only else list(TABLES)
+    for name in todo:
+        TABLES[name]()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,38 @@
+"""Quickstart: train a tiny qwen2-family model for a few steps on CPU and
+sample from it. Runs in ~1 minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduce_config
+from repro.serve.engine import Request, ServeEngine
+from repro.train.trainer import TrainLoopConfig, Trainer
+
+
+def main():
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=128,
+                        vocab=256)
+    loop = TrainLoopConfig(total_steps=20, ckpt_every=10, log_every=5,
+                           ckpt_dir="runs/quickstart_ckpt", seq_len=64,
+                           global_batch=4, peak_lr=1e-3)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    trainer = Trainer(cfg, loop, mesh)
+    out = trainer.run()
+    print(f"final loss: {out['final_loss']:.4f} "
+          f"(stragglers flagged: {out['stragglers']})")
+
+    # restore the checkpoint and serve a couple of batched requests
+    step, state = trainer.ckpt.restore()
+    print(f"restored step {step}")
+    engine = ServeEngine(cfg, state["params"], max_batch=2)
+    reqs = [Request(rid=i, prompt=np.arange(5 + i) % 256, max_new_tokens=8)
+            for i in range(3)]
+    for rid, toks in engine.run(reqs).items():
+        print(f"request {rid}: {toks}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Hierarchical roofline model — the paper's contribution as a library.
+
+The paper (Yang 2020) analyzes one kernel with a three-level hierarchical
+roofline (L1/L2/HBM) plus a customized compute ceiling derived from the
+measured FMA fraction. This module generalizes that to the multi-chip TPU
+setting used by the rest of the framework:
+
+  compute term     = HLO_FLOPs_per_chip / peak_FLOP/s          (seconds)
+  memory term      = HLO_bytes_per_chip / HBM_bw               (seconds)
+  collective term  = collective_bytes_per_chip / ICI link bw   (seconds)
+
+The dominant term is the bottleneck; modeled step time = max of the three
+(perfect-overlap assumption — reported alongside the no-overlap sum), and the
+roofline fraction is compute_term / modeled_time.
+
+The customized ceiling generalizes the paper's FMA-ratio ceiling: with a
+fraction r of FLOPs on the MXU and (1-r) on the VPU, the attainable peak is
+    F_total / (F_mxu/P_mxu + F_vpu/P_vpu)
+— the paper's (2r + (1-r))/2 formula is exactly this with P_fma = 2 * P_nonfma.
+
+Sources: compiled.cost_analysis() for FLOPs/bytes (per-device program after
+SPMD partitioning), compiled.as_text() parsed by hlo_analysis for collective
+bytes and MXU-dot FLOPs. compiled.memory_analysis() proves per-device fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional
+
+from repro.core import hlo_analysis
+from repro.core.hw import TPU_V5E, HardwareSpec
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    name: str
+    mesh_shape: tuple
+    chips: int
+
+    # raw per-chip quantities (per-device SPMD program)
+    flops_per_chip: float
+    bytes_per_chip: float
+    collective_bytes_per_chip: float
+    mxu_flops_per_chip: float
+
+    # derived seconds
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    # ceilings
+    customized_peak_flops: float  # paper's FMA-ratio analogue (MXU/VPU mix)
+    mxu_fraction: float
+
+    # memory fit (per-device, bytes)
+    device_memory_bytes: Optional[int] = None
+
+    # semantic model FLOPs (6ND convention), total across chips, per step
+    model_flops_total: Optional[float] = None
+
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # ---- derived properties -------------------------------------------------
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def modeled_step_s(self) -> float:
+        """Perfect-overlap model: step time = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def modeled_step_s_noverlap(self) -> float:
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def roofline_fraction(self) -> float:
+        """How close modeled time is to the pure-compute bound (1.0 = at roof)."""
+        t = self.modeled_step_s
+        return (self.compute_s / t) if t > 0 else 0.0
+
+    @property
+    def customized_fraction(self) -> float:
+        """Fraction of the customized (MXU/VPU-mix) peak achieved at modeled time."""
+        t = self.modeled_step_s
+        if t <= 0 or self.customized_peak_flops <= 0:
+            return 0.0
+        return (self.flops_per_chip / t) / self.customized_peak_flops
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste (<1 means
+        the compiler executes more FLOPs than the math requires, e.g. remat)."""
+        if self.model_flops_total is None:
+            return None
+        hlo_total = self.flops_per_chip * self.chips
+        return self.model_flops_total / hlo_total if hlo_total > 0 else None
+
+    @property
+    def achieved_tflops_per_chip(self) -> float:
+        t = self.modeled_step_s
+        return (self.flops_per_chip / t) / 1e12 if t > 0 else 0.0
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "name": self.name,
+            "mesh": "x".join(map(str, self.mesh_shape)),
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "step_s": self.modeled_step_s,
+            "roofline_frac": self.roofline_fraction,
+            "mxu_frac": self.mxu_fraction,
+            "achieved_tflops_chip": self.achieved_tflops_per_chip,
+            "useful_ratio": self.useful_flops_ratio,
+            "hbm_gib_per_chip": (self.device_memory_bytes or 0) / 2**30,
+            "model_flops": self.model_flops_total,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.row(), default=float)
+
+
+def customized_ceiling(total_flops: float, mxu_flops: float,
+                       hw: HardwareSpec = TPU_V5E) -> float:
+    """Attainable FLOP/s peak given the measured MXU fraction.
+
+    Paper analogue: 58% FMA => (2*.58 + .42)/2 = 79% of 6.7 TF = 5.3 TF.
+    Here: time-weighted mix of MXU-rate and VPU-rate FLOPs.
+    """
+    total_flops = max(total_flops, 1.0)
+    mxu = min(mxu_flops, total_flops)
+    vpu = total_flops - mxu
+    t = mxu / hw.mxu_flops + vpu / hw.vpu_flops
+    return total_flops / t if t > 0 else hw.mxu_flops
+
+
+def analyze_compiled(
+    name: str,
+    compiled,
+    mesh_shape: tuple,
+    *,
+    hw: HardwareSpec = TPU_V5E,
+    model_flops_total: Optional[float] = None,
+    hlo_text: Optional[str] = None,
+) -> RooflineReport:
+    """Build a RooflineReport from a jax compiled executable.
+
+    `compiled` is the result of jit(...).lower(...).compile(). With SPMD
+    partitioning the module is the per-device program, so cost_analysis()
+    yields per-chip FLOPs/bytes directly.
+    """
+    chips = 1
+    for d in mesh_shape:
+        chips *= d
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):  # older jax returns [dict]
+        cost = cost[0]
+    xla_flops = float(cost.get("flops", 0.0))
+    xla_bytes = float(cost.get("bytes accessed", 0.0))
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    # loop-aware census: XLA's cost_analysis counts while-loop (scan) bodies
+    # once; module_cost scales by trip count (hlo_analysis docstring).
+    mc = hlo_analysis.module_cost(text)
+    flops = max(mc.flops, xla_flops)
+    nbytes = mc.hbm_bytes
+    coll = hlo_analysis.CollectiveStats(
+        {k: int(v) for k, v in mc.collective_bytes_by_kind.items()},
+        {k: int(v) for k, v in mc.collective_count_by_kind.items()}, [])
+    mxu = min(mc.dot_flops, flops) if flops > 0 else mc.dot_flops
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        mem = int(
+            getattr(ma, "argument_size_in_bytes", 0)
+            + getattr(ma, "output_size_in_bytes", 0)
+            + getattr(ma, "temp_size_in_bytes", 0)
+            + getattr(ma, "generated_code_size_in_bytes", 0)
+            - getattr(ma, "alias_size_in_bytes", 0)
+        )
+    except Exception:
+        pass
+
+    compute_s = flops / hw.mxu_flops
+    # VPU-aware compute term: the same FLOPs at the customized mix rate.
+    cpeak = customized_ceiling(flops, mxu, hw)
+    compute_s_customized = flops / cpeak if cpeak > 0 else compute_s
+
+    report = RooflineReport(
+        name=name,
+        mesh_shape=tuple(mesh_shape),
+        chips=chips,
+        flops_per_chip=flops,
+        bytes_per_chip=nbytes,
+        collective_bytes_per_chip=float(coll.total_bytes),
+        mxu_flops_per_chip=mxu,
+        compute_s=compute_s_customized,
+        memory_s=nbytes / hw.hbm_bw,
+        collective_s=float(coll.total_bytes) / hw.ici_bw,
+        customized_peak_flops=cpeak,
+        mxu_fraction=(mxu / flops) if flops > 0 else 0.0,
+        device_memory_bytes=mem,
+        model_flops_total=model_flops_total,
+        extra={
+            "collective_bytes_by_kind": coll.bytes_by_kind,
+            "collective_count_by_kind": coll.count_by_kind,
+            "mxu_peak_compute_s": compute_s,
+            "xla_flat_flops": xla_flops,
+            "xla_flat_bytes": xla_bytes,
+            "while_trips": mc.while_trips,
+        },
+    )
+    return report
+
+
+def analyze_counts(
+    name: str,
+    *,
+    flops: float,
+    hbm_bytes: float,
+    collective_bytes: float = 0.0,
+    mxu_flops: float = 0.0,
+    mesh_shape: tuple = (1,),
+    hw: HardwareSpec = TPU_V5E,
+    model_flops_total: Optional[float] = None,
+    vmem_bytes: Optional[float] = None,
+) -> RooflineReport:
+    """Roofline from analytic counts (used by the GPP journey, where the
+    kernel's FLOPs/bytes are derived from the algorithm + BlockSpec tiling
+    rather than a compiled TPU module)."""
+    chips = 1
+    for d in mesh_shape:
+        chips *= d
+    cpeak = customized_ceiling(flops, mxu_flops, hw)
+    extra: Dict[str, Any] = {"mxu_peak_compute_s": flops / hw.mxu_flops}
+    if vmem_bytes is not None:
+        extra["vmem_bytes"] = vmem_bytes
+        extra["vmem_ai"] = flops / vmem_bytes if vmem_bytes else float("inf")
+    return RooflineReport(
+        name=name,
+        mesh_shape=tuple(mesh_shape),
+        chips=chips,
+        flops_per_chip=flops,
+        bytes_per_chip=hbm_bytes,
+        collective_bytes_per_chip=collective_bytes,
+        mxu_flops_per_chip=mxu_flops,
+        compute_s=flops / cpeak if cpeak > 0 else 0.0,
+        memory_s=hbm_bytes / hw.hbm_bw,
+        collective_s=collective_bytes / hw.ici_bw,
+        customized_peak_flops=cpeak,
+        mxu_fraction=(mxu_flops / flops) if flops > 0 else 0.0,
+        model_flops_total=model_flops_total,
+        extra=extra,
+    )
+
+
+def format_table(reports, *, extra_cols=()) -> str:
+    """Markdown table of roofline rows (used by EXPERIMENTS.md generators)."""
+    cols = [
+        ("cell", "name", "{}"),
+        ("mesh", "mesh", "{}"),
+        ("compute_s", "compute_s", "{:.4g}"),
+        ("memory_s", "memory_s", "{:.4g}"),
+        ("collective_s", "collective_s", "{:.4g}"),
+        ("dominant", "dominant", "{}"),
+        ("step_s", "step_s", "{:.4g}"),
+        ("roofline", "roofline_frac", "{:.2%}"),
+        ("mxu%", "mxu_frac", "{:.1%}"),
+        ("TF/chip", "achieved_tflops_chip", "{:.1f}"),
+        ("useful", "useful_ratio", "{}"),
+        ("GiB/chip", "hbm_gib_per_chip", "{:.2f}"),
+    ]
+    lines = ["| " + " | ".join(c[0] for c in cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in reports:
+        row = r.row()
+        vals = []
+        for _, key, fmt in cols:
+            v = row.get(key)
+            if v is None:
+                vals.append("—")
+            elif key == "useful_ratio":
+                vals.append(f"{v:.2f}" if v is not None else "—")
+            else:
+                vals.append(fmt.format(v))
+        lines.append("| " + " | ".join(vals) + " |")
+    return "\n".join(lines)

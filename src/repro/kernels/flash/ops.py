@@ -1,0 +1,39 @@
+"""Public flash attention API used by models/attention.py.
+
+flash_attention(q, k, v): (B, S, H, Hd) x (B, S, KvH, Hd) layout (the
+model's native layout); reshapes to planar heads, runs the Pallas kernel
+(interpret on CPU), restores the layout.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash.flash import flash_attention_bhsd, flash_attention_diff
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    blk_q: int = 256, blk_kv: int = 256,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B,S,H,Hd); k/v: (B,S,KvH,Hd) -> (B,S,H,Hd)."""
+    b, s, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    if interpret is None:
+        interpret = not _on_tpu()
+    blk_q = min(blk_q, s)
+    blk_kv = min(blk_kv, skv)
+    qp = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
+    kp = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    vp = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+    out = flash_attention_diff(qp, kp, vp, blk_q, blk_kv, causal, interpret)
+    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)

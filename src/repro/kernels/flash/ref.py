@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash kernel: exact (one-shot) softmax attention
+in f32 over (BH, S, Hd) planar heads."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: (BH, S, Hd); k/v: (BKvH, S, Hd). Exact attention, f32."""
+    bh, sq, hd = q.shape
+    bkv = k.shape[0]
+    group = bh // bkv
+    kk = jnp.repeat(k, group, axis=0)
+    vv = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * hd ** -0.5
+    if causal:
+        i = jnp.arange(sq)[:, None]
+        j = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(j <= i, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,45 @@
+"""Public GPP kernel API.
+
+    from repro.kernels.gpp import ops
+    ach, asx = ops.gpp(inputs, version="v8")
+
+v0–v5 dispatch to the pure-JAX variants; v6–v8 to the Pallas kernel
+(interpret=True on CPU — the container has no TPU; on a real TPU pass
+interpret=False). `inputs` is the planar dict from problem.make_inputs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+
+from repro.kernels.gpp import pallas_gpp, variants
+
+DEFAULT_VERSION = "v8"
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def gpp(inputs: Dict, version: str = DEFAULT_VERSION, *,
+        interpret: Optional[bool] = None,
+        block_config: Optional[pallas_gpp.BlockConfig] = None
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Run the GPP kernel. Returns (achtemp, asxtemp), complex64 (nw,)."""
+    if version in variants.VARIANTS:
+        return jax.jit(variants.VARIANTS[version])(inputs)
+    if version not in pallas_gpp.CONFIGS and block_config is None:
+        raise ValueError(f"unknown GPP version {version!r}")
+    cfg = block_config or pallas_gpp.CONFIGS[version]
+    if interpret is None:
+        interpret = not _on_tpu()
+    return pallas_gpp.gpp_pallas(inputs, cfg, interpret=interpret)
+
+
+gpp_v8 = functools.partial(gpp, version="v8")

@@ -1,0 +1,251 @@
+"""GPP Pallas TPU kernel — the paper's v6 (cache blocking), v7 (index swap)
+and v8 (block-size tuning) steps, made *explicit* through BlockSpecs.
+
+Grid: (n_igp_blocks, n_ig_blocks, n_band_blocks) — band innermost, so the
+output block (indexed by igp/ig only) is revisited across band steps and
+accumulated in place (@pl.when(band_step == 0) zero-init). The wtilde/eps
+tiles' index maps don't depend on the band index, so the Pallas pipeline
+keeps them resident in VMEM across the whole in-block band sweep — this IS
+the paper's v4/v6 reuse structure, declared rather than hoped-for from a
+cache (DESIGN.md §2).
+
+In-kernel layout (TPU 8x128 VREG lanes):
+  wtilde/eps tiles: (BLK_IG, BLK_IGP)  — sublanes=ig, lanes=igp
+  aqsn: passed transposed (nbands, ncouls), tile (BLK_BAND, BLK_IG):
+        row read aqsn[b, :] is a sublane-indexed load (cheap)
+  aqsm v6 layout: (ngpown, nbands), tile (BLK_IGP, BLK_BAND): the per-band
+        read is a *lane-dim dynamic slice + relayout* — the TPU analogue of
+        the paper's non-contiguous aqsmtemp(igp,band) access.
+  aqsm v7 layout: transposed (nbands, ngpown), tile (BLK_BAND, BLK_IGP):
+        per-band read is a sublane row, broadcast straight onto lanes.
+  v8: same code as v7 with tuned (larger) blocks — lanes filled (BLK_IGP>=128),
+      VMEM working set sized for double-buffering (see VMEM_MODEL).
+
+Numerics: planar f32; validated in interpret mode against ref.ref_numpy
+(complex128) by tests/test_gpp_kernel.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gpp.problem import LIMITONE, LIMITTWO, TOL_ZERO, GppSize
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    name: str
+    blk_ig: int
+    blk_igp: int
+    blk_band: int
+    aqsm_transposed: bool   # v7/v8 layout swap
+
+    def vmem_bytes(self, nw: int = 2) -> int:
+        """Analytic VMEM working set (×2 for double buffering on inputs)."""
+        t_ig_igp = self.blk_ig * self.blk_igp * 4
+        inputs = 4 * t_ig_igp                                 # wt/eps re+im
+        inputs += 2 * self.blk_band * self.blk_ig * 4         # aqsn tile
+        inputs += 2 * self.blk_band * self.blk_igp * 4        # aqsm tile
+        inputs += self.blk_band * nw * 4 + self.blk_ig * 4    # wx, vcoul
+        live = 14 * t_ig_igp                                  # intermediates
+        return 2 * inputs + live
+
+
+# canonical journey configs. v6: first blocking attempt — small band blocks
+# and aqsm in (igp, band) layout, whose lane dim (band=8) is below the 128
+# DMA/VREG granularity (traffic inflation + per-band lane relayout). v7:
+# index swap fixes the layout. v8: block sizes tuned (core/journey.py sweep)
+# so per-instance compute amortizes grid/DMA issue overhead.
+V6 = BlockConfig("v6", blk_ig=256, blk_igp=128, blk_band=8, aqsm_transposed=False)
+V7 = BlockConfig("v7", blk_ig=256, blk_igp=128, blk_band=8, aqsm_transposed=True)
+V8 = BlockConfig("v8", blk_ig=512, blk_igp=128, blk_band=32, aqsm_transposed=True)
+
+CONFIGS = {"v6": V6, "v7": V7, "v8": V8}
+
+
+def _kernel(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
+            aqsn_re_ref, aqsn_im_ref, aqsm_re_ref, aqsm_im_ref,
+            wx_ref, vcoul_ref,
+            ach_re_ref, ach_im_ref, asx_re_ref, asx_im_ref,
+            *, cfg: BlockConfig, nw: int):
+    band_step = pl.program_id(2)
+
+    @pl.when(band_step == 0)
+    def _init():
+        ach_re_ref[...] = jnp.zeros_like(ach_re_ref)
+        ach_im_ref[...] = jnp.zeros_like(ach_im_ref)
+        asx_re_ref[...] = jnp.zeros_like(asx_re_ref)
+        asx_im_ref[...] = jnp.zeros_like(asx_im_ref)
+
+    wt_re = wt_re_ref[...]            # (BIG, BIGP) — resident across bands
+    wt_im = wt_im_ref[...]
+    eps_re = eps_re_ref[...]
+    eps_im = eps_im_ref[...]
+    vcoul = vcoul_ref[...]            # (BIG, 1)
+
+    # band-invariant subexpressions (the paper's v5 hoist)
+    wt2_re = wt_re * wt_re - wt_im * wt_im
+    wt2_im = 2.0 * wt_re * wt_im
+    om2_re = wt2_re * eps_re - wt2_im * eps_im
+    om2_im = wt2_re * eps_im + wt2_im * eps_re
+
+    def band_iter(b, carry):
+        accs = carry
+
+        an_re = aqsn_re_ref[b, :][:, None]           # (BIG, 1) sublane row
+        an_im = aqsn_im_ref[b, :][:, None]
+        if cfg.aqsm_transposed:
+            # v7/v8: sublane row read, broadcast onto lanes
+            am_re = aqsm_re_ref[b, :][None, :]       # (1, BIGP)
+            am_im = aqsm_im_ref[b, :][None, :]
+        else:
+            # v6: lane-dim dynamic slice + relayout (the "wrong" layout)
+            am_re = aqsm_re_ref[:, b][None, :]
+            am_im = aqsm_im_ref[:, b][None, :]
+
+        # mat(ig,igp) = conj(aqsm)*aqsn, pre-scaled by vcoul(ig)
+        mat_re = an_re * am_re + an_im * am_im
+        mat_im = an_im * am_re - an_re * am_im
+        wre = vcoul * mat_re
+        wim = vcoul * mat_im
+
+        new_accs = []
+        for iw in range(nw):
+            wxv = wx_ref[b, iw]
+            wd_re = wxv - wt_re
+            wd_im = -wt_im
+            wdiffr = wd_re * wd_re + wd_im * wd_im
+            rden = 1.0 / wdiffr
+            delw_re = (wt_re * wd_re + wt_im * wd_im) * rden
+            delw_im = (wt_im * wd_re - wt_re * wd_im) * rden
+            delwr = delw_re * delw_re + delw_im * delw_im
+            cond1 = (wdiffr > LIMITTWO) & (delwr < LIMITONE)
+            cond2 = (~cond1) & (delwr > TOL_ZERO)
+
+            sch1_re = delw_re * eps_re - delw_im * eps_im
+            sch1_im = delw_re * eps_im + delw_im * eps_re
+            cden1_re = wxv * wxv - wt2_re
+            cden1_im = -wt2_im
+            c1sq = cden1_re * cden1_re + cden1_im * cden1_im
+            r1 = 1.0 / c1sq
+            ssx1_re = (om2_re * cden1_re + om2_im * cden1_im) * r1
+            ssx1_im = (om2_im * cden1_re - om2_re * cden1_im) * r1
+
+            f4_re = 4.0 * (delw_re + 0.5)
+            f4_im = 4.0 * delw_im
+            cd2_re = wt2_re * f4_re - wt2_im * f4_im
+            cd2_im = wt2_re * f4_im + wt2_im * f4_re
+            c2sq = cd2_re * cd2_re + cd2_im * cd2_im
+            c2sq = jnp.where(c2sq == 0, 1.0, c2sq)
+            n2_re = -(om2_re * delw_re - om2_im * delw_im)
+            n2_im = -(om2_re * delw_im + om2_im * delw_re)
+            r2 = 1.0 / c2sq
+            ssx2_re = (n2_re * cd2_re + n2_im * cd2_im) * r2
+            ssx2_im = (n2_im * cd2_re - n2_re * cd2_im) * r2
+
+            sch_re = jnp.where(cond1, sch1_re, 0.0)
+            sch_im = jnp.where(cond1, sch1_im, 0.0)
+            ssx_re = jnp.where(cond1, ssx1_re, jnp.where(cond2, ssx2_re, 0.0))
+            ssx_im = jnp.where(cond1, ssx1_im, jnp.where(cond2, ssx2_im, 0.0))
+
+            da_re = jnp.sum(wre * sch_re - wim * sch_im)
+            da_im = jnp.sum(wre * sch_im + wim * sch_re)
+            dx_re = jnp.sum(wre * ssx_re - wim * ssx_im)
+            dx_im = jnp.sum(wre * ssx_im + wim * ssx_re)
+            a_re, a_im, x_re, x_im = accs[iw]
+            new_accs.append((a_re + da_re, a_im + da_im,
+                             x_re + dx_re, x_im + dx_im))
+        return tuple(new_accs)
+
+    zero = jnp.float32(0.0)
+    init = tuple((zero, zero, zero, zero) for _ in range(nw))
+    accs = jax.lax.fori_loop(0, cfg.blk_band, band_iter, init)
+
+    for iw in range(nw):
+        a_re, a_im, x_re, x_im = accs[iw]
+        ach_re_ref[0, 0, iw] += a_re
+        ach_im_ref[0, 0, iw] += a_im
+        asx_re_ref[0, 0, iw] += x_re
+        asx_im_ref[0, 0, iw] += x_im
+
+
+def gpp_pallas(inputs: Dict, cfg: BlockConfig, *,
+               interpret: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """Run the blocked GPP kernel. inputs: planar dict (problem.make_inputs).
+    Returns (ach (nw,) complex64, asx (nw,) complex64)."""
+    f = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+    ncouls, ngpown = f["wtilde_re"].shape
+    nw, nbands = f["wx"].shape
+
+    assert ncouls % cfg.blk_ig == 0, (ncouls, cfg.blk_ig)
+    assert ngpown % cfg.blk_igp == 0, (ngpown, cfg.blk_igp)
+    assert nbands % cfg.blk_band == 0, (nbands, cfg.blk_band)
+    n_ig = ncouls // cfg.blk_ig
+    n_igp = ngpown // cfg.blk_igp
+    n_b = nbands // cfg.blk_band
+
+    aqsn_re = f["aqsn_re"].T            # (nbands, ncouls)
+    aqsn_im = f["aqsn_im"].T
+    if cfg.aqsm_transposed:
+        aqsm_re = f["aqsm_re"].T        # (nbands, ngpown)
+        aqsm_im = f["aqsm_im"].T
+        aqsm_spec = pl.BlockSpec((cfg.blk_band, cfg.blk_igp),
+                                 lambda i, j, b: (b, i))
+    else:
+        aqsm_re = f["aqsm_re"]          # (ngpown, nbands)
+        aqsm_im = f["aqsm_im"]
+        aqsm_spec = pl.BlockSpec((cfg.blk_igp, cfg.blk_band),
+                                 lambda i, j, b: (i, b))
+    wx = f["wx"].T                      # (nbands, nw)
+    vcoul = f["vcoul"][:, None]         # (ncouls, 1)
+
+    ig_igp = pl.BlockSpec((cfg.blk_ig, cfg.blk_igp), lambda i, j, b: (j, i))
+    aqsn_spec = pl.BlockSpec((cfg.blk_band, cfg.blk_ig), lambda i, j, b: (b, j))
+    wx_spec = pl.BlockSpec((cfg.blk_band, nw), lambda i, j, b: (b, 0))
+    vc_spec = pl.BlockSpec((cfg.blk_ig, 1), lambda i, j, b: (j, 0))
+    out_spec = pl.BlockSpec((1, 1, nw), lambda i, j, b: (i, j, 0))
+    out_shape = jax.ShapeDtypeStruct((n_igp, n_ig, nw), jnp.float32)
+
+    kern = functools.partial(_kernel, cfg=cfg, nw=nw)
+    outs = pl.pallas_call(
+        kern,
+        grid=(n_igp, n_ig, n_b),
+        in_specs=[ig_igp, ig_igp, ig_igp, ig_igp,
+                  aqsn_spec, aqsn_spec, aqsm_spec, aqsm_spec,
+                  wx_spec, vc_spec],
+        out_specs=[out_spec, out_spec, out_spec, out_spec],
+        out_shape=[out_shape] * 4,
+        interpret=interpret,
+    )(f["wtilde_re"], f["wtilde_im"], f["eps_re"], f["eps_im"],
+      aqsn_re, aqsn_im, aqsm_re, aqsm_im, wx, vcoul)
+
+    ach_re, ach_im, asx_re, asx_im = outs
+    ach = jnp.sum(ach_re, (0, 1)) + 1j * jnp.sum(ach_im, (0, 1))
+    asx = jnp.sum(asx_re, (0, 1)) + 1j * jnp.sum(asx_im, (0, 1))
+    return ach.astype(jnp.complex64), asx.astype(jnp.complex64)
+
+
+def hbm_traffic_model(size: GppSize, cfg: BlockConfig) -> float:
+    """Exact HBM byte count for the Pallas pipeline (deterministic — the
+    blocks a pipeline fetches are fully determined by the index maps):
+      wtilde/eps: fetched once per (igp, ig) block  -> full arrays once
+      aqsn: index (ig, band) — refetched per igp block
+      aqsm: index (igp, band) — refetched per ig block
+      wx/vcoul/outs: negligible (counted anyway)
+    """
+    n_ig = size.ncouls // cfg.blk_ig
+    n_igp = size.ngpown // cfg.blk_igp
+    b = 0.0
+    b += 4 * 4 * size.ncouls * size.ngpown                 # wt/eps planes
+    b += n_igp * 2 * 4 * size.ncouls * size.nbands         # aqsn
+    b += n_ig * 2 * 4 * size.ngpown * size.nbands          # aqsm
+    b += n_ig * n_igp * 4 * size.nw * size.nbands          # wx
+    b += n_igp * 4 * size.ncouls                           # vcoul
+    b += 4 * 4 * n_ig * n_igp * size.nw                    # outputs
+    return b

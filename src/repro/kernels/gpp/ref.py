@@ -1,0 +1,117 @@
+"""GPP oracles.
+
+`ref_numpy` — complex128 numpy, the precision reference (the paper's FP64).
+`ref_jnp`   — complex64 jnp, jit-able oracle used by the kernel allclose
+              sweeps (tests/test_gpp_kernel.py).
+
+Both implement the branch semantics documented in problem.py verbatim, with
+divides and 3-way branching — i.e. the *v0 algorithm* in exact arithmetic.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gpp.problem import LIMITONE, LIMITTWO, TOL_ZERO
+
+
+def _complex_views(inputs: Dict, xp):
+    wtilde = inputs["wtilde_re"] + 1j * inputs["wtilde_im"]
+    eps = inputs["eps_re"] + 1j * inputs["eps_im"]
+    aqsn = inputs["aqsn_re"] + 1j * inputs["aqsn_im"]
+    aqsm = inputs["aqsm_re"] + 1j * inputs["aqsm_im"]
+    return wtilde, eps, aqsn, aqsm, inputs["wx"], inputs["vcoul"]
+
+
+def ref_numpy(inputs: Dict[str, np.ndarray]) -> Tuple[np.ndarray, np.ndarray]:
+    """complex128 oracle. Returns (achtemp (nw,), asxtemp (nw,))."""
+    wtilde, eps, aqsn, aqsm, wx, vcoul = _complex_views(inputs, np)
+    wtilde = wtilde.astype(np.complex128)
+    eps = eps.astype(np.complex128)
+    aqsn = aqsn.astype(np.complex128)
+    aqsm = aqsm.astype(np.complex128)
+    wx = wx.astype(np.float64)
+    vcoul = vcoul.astype(np.float64)
+
+    ncouls, ngpown = wtilde.shape
+    nbands = aqsn.shape[1]
+    nw = wx.shape[0]
+
+    ach = np.zeros(nw, np.complex128)
+    asx = np.zeros(nw, np.complex128)
+
+    wtilde2 = wtilde * wtilde                          # (ig, igp)
+    omega2 = wtilde2 * eps
+
+    for iw in range(nw):
+        for bb in range(nbands):                        # blocked for memory
+            wxv = wx[iw, bb]                            # scalar
+            wdiff = wxv - wtilde                        # (ig, igp)
+            wdiffr = (wdiff * np.conj(wdiff)).real
+            delw = wtilde * np.conj(wdiff) / np.maximum(wdiffr, 1e-300)
+            delwr = (delw * np.conj(delw)).real
+
+            cond1 = (wdiffr > LIMITTWO) & (delwr < LIMITONE)
+            cond2 = (~cond1) & (delwr > TOL_ZERO)
+
+            sch = np.where(cond1, delw * eps, 0.0)
+            cden1 = wxv * wxv - wtilde2
+            ssx1 = omega2 / np.where(cden1 == 0, 1.0, cden1)
+            cden2 = 4.0 * wtilde2 * (delw + 0.5)
+            ssx2 = -omega2 * delw / np.where(cden2 == 0, 1.0, cden2)
+            ssx = np.where(cond1, ssx1, np.where(cond2, ssx2, 0.0))
+
+            mat = np.conj(aqsm[:, bb])[None, :] * aqsn[:, bb][:, None]  # (ig, igp)
+            w = vcoul[:, None] * mat
+            ach[iw] += np.sum(w * sch)
+            asx[iw] += np.sum(w * ssx)
+    return ach, asx
+
+
+def ref_jnp(inputs: Dict) -> Tuple[jax.Array, jax.Array]:
+    """complex64 jnp oracle (same algorithm; scan over bands)."""
+    f32 = {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+    wtilde = f32["wtilde_re"] + 1j * f32["wtilde_im"]
+    eps = f32["eps_re"] + 1j * f32["eps_im"]
+    aqsn = f32["aqsn_re"] + 1j * f32["aqsn_im"]
+    aqsm = f32["aqsm_re"] + 1j * f32["aqsm_im"]
+    wx = f32["wx"]
+    vcoul = f32["vcoul"]
+    nw = wx.shape[0]
+
+    wtilde2 = wtilde * wtilde
+    omega2 = wtilde2 * eps
+
+    def per_band(carry, inp):
+        ach, asx = carry
+        wxb, aqsn_b, aqsm_b = inp                      # (nw,), (ig,), (igp,)
+        mat = jnp.conj(aqsm_b)[None, :] * aqsn_b[:, None]
+        w = vcoul[:, None] * mat
+
+        def per_iw(iw):
+            wxv = wxb[iw]
+            wdiff = wxv - wtilde
+            wdiffr = (wdiff * jnp.conj(wdiff)).real
+            delw = wtilde * jnp.conj(wdiff) / jnp.maximum(wdiffr, 1e-30)
+            delwr = (delw * jnp.conj(delw)).real
+            cond1 = (wdiffr > LIMITTWO) & (delwr < LIMITONE)
+            cond2 = (~cond1) & (delwr > TOL_ZERO)
+            sch = jnp.where(cond1, delw * eps, 0.0)
+            cden1 = wxv * wxv - wtilde2
+            ssx1 = omega2 / jnp.where(cden1 == 0, 1.0, cden1)
+            cden2 = 4.0 * wtilde2 * (delw + 0.5)
+            ssx2 = -omega2 * delw / jnp.where(cden2 == 0, 1.0, cden2)
+            ssx = jnp.where(cond1, ssx1, jnp.where(cond2, ssx2, 0.0))
+            return jnp.sum(w * sch), jnp.sum(w * ssx)
+
+        da, dx = jax.vmap(per_iw)(jnp.arange(nw))
+        return (ach + da, asx + dx), None
+
+    init = (jnp.zeros(nw, jnp.complex64), jnp.zeros(nw, jnp.complex64))
+    (ach, asx), _ = jax.lax.scan(
+        per_band, init, (wx.T, aqsn.T, aqsm.T))
+    return ach, asx

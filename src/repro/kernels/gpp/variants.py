@@ -1,0 +1,250 @@
+"""GPP optimization journey, steps v0–v5 (pure JAX, planar f32).
+
+Each step mirrors the paper's optimization (Sec. III) translated to the TPU
+execution model (DESIGN.md §2 has the full mapping table):
+
+  v0  baseline: collapse(3)-style evaluation, complex divides (2 real divides
+      per complex division), abs()/sqrt in branch conditions, 3-way branch,
+      streaming over igp (no reuse of aqsn across igp — the "little to no
+      cache reuse" baseline).
+  v1  divides -> reciprocals: one rcp per |.|^2 then multiplies.
+  v2  3-way branch -> zero-init + 2 masked selects (branchless; on the TPU
+      VPU this is the mandatory form — measured as select-count in HLO).
+  v3  abs()/sqrt in conditions -> squared-magnitude compares.
+  v4  raise arithmetic intensity: serialize *band* (scan over band blocks),
+      keeping the (ig,igp) arrays hot across band iterations.
+  v5  hoist the iw loop / share subexpressions: mat, wtilde2, omega2 computed
+      once per (ig,igp[,band]) instead of per iw; reduction restructured.
+
+v6–v8 (cache blocking / layout swap / block-size tuning) live in the Pallas
+kernel: see pallas_gpp.py and ops.py.
+
+All variants take the planar-f32 input dict (problem.make_inputs) and return
+(ach (nw,) complex64, asx (nw,) complex64).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gpp.problem import LIMITONE, LIMITTWO, TOL_ZERO
+
+SQRT_LIMITONE = LIMITONE ** 0.5
+SQRT_LIMITTWO = LIMITTWO ** 0.5
+
+
+def _f32(inputs: Dict) -> Dict:
+    return {k: jnp.asarray(v, jnp.float32) for k, v in inputs.items()}
+
+
+def _cmul(ar, ai, br, bi):
+    return ar * br - ai * bi, ar * bi + ai * br
+
+
+# ---------------------------------------------------------------------------
+# the branch math, parameterized by the optimization step
+# ---------------------------------------------------------------------------
+
+def _body(wxv, wt_re, wt_im, eps_re, eps_im, wt2_re, wt2_im, om2_re, om2_im,
+          *, use_div: bool, use_abs: bool, three_way: bool):
+    """Everything per (iw, band) scalar wxv against the (ig,igp) planes.
+    Returns (sch_re, sch_im, ssx_re, ssx_im)."""
+    wd_re = wxv - wt_re
+    wd_im = -wt_im
+    wdiffr = wd_re * wd_re + wd_im * wd_im
+
+    if use_div:
+        # v0: two real divides per complex division (the long-latency path)
+        delw_re = (wt_re * wd_re + wt_im * wd_im) / wdiffr
+        delw_im = (wt_im * wd_re - wt_re * wd_im) / wdiffr
+    else:
+        # v1: one reciprocal, then multiplies
+        rden = 1.0 / wdiffr
+        delw_re = (wt_re * wd_re + wt_im * wd_im) * rden
+        delw_im = (wt_im * wd_re - wt_re * wd_im) * rden
+
+    delwr = delw_re * delw_re + delw_im * delw_im
+
+    if use_abs:
+        # v0–v2: abs() (sqrt) in the condition evaluation
+        cond1 = (jnp.sqrt(wdiffr) > SQRT_LIMITTWO) & \
+                (jnp.sqrt(delwr) < SQRT_LIMITONE)
+    else:
+        # v3: squared-magnitude compares
+        cond1 = (wdiffr > LIMITTWO) & (delwr < LIMITONE)
+    cond2 = delwr > TOL_ZERO
+
+    # branch 1
+    sch1_re, sch1_im = _cmul(delw_re, delw_im, eps_re, eps_im)
+    cden1_re = wxv * wxv - wt2_re
+    cden1_im = -wt2_im
+    c1sq = cden1_re * cden1_re + cden1_im * cden1_im
+    if use_div:
+        ssx1_re = (om2_re * cden1_re + om2_im * cden1_im) / c1sq
+        ssx1_im = (om2_im * cden1_re - om2_re * cden1_im) / c1sq
+    else:
+        r1 = 1.0 / c1sq
+        ssx1_re = (om2_re * cden1_re + om2_im * cden1_im) * r1
+        ssx1_im = (om2_im * cden1_re - om2_re * cden1_im) * r1
+
+    # branch 2
+    cd2_re, cd2_im = _cmul(wt2_re, wt2_im, 4.0 * (delw_re + 0.5), 4.0 * delw_im)
+    c2sq = cd2_re * cd2_re + cd2_im * cd2_im
+    c2sq = jnp.where(c2sq == 0, 1.0, c2sq)
+    n2_re, n2_im = _cmul(-om2_re, -om2_im, delw_re, delw_im)
+    if use_div:
+        ssx2_re = (n2_re * cd2_re + n2_im * cd2_im) / c2sq
+        ssx2_im = (n2_im * cd2_re - n2_re * cd2_im) / c2sq
+    else:
+        r2 = 1.0 / c2sq
+        ssx2_re = (n2_re * cd2_re + n2_im * cd2_im) * r2
+        ssx2_im = (n2_im * cd2_re - n2_re * cd2_im) * r2
+
+    if three_way:
+        # v0/v1: nested 3-way selection (mirrors the if/elif/else chain)
+        sch_re = jnp.where(cond1, sch1_re, jnp.where(cond2, 0.0, 0.0))
+        sch_im = jnp.where(cond1, sch1_im, jnp.where(cond2, 0.0, 0.0))
+        ssx_re = jnp.where(cond1, ssx1_re, jnp.where(cond2, ssx2_re, 0.0))
+        ssx_im = jnp.where(cond1, ssx1_im, jnp.where(cond2, ssx2_im, 0.0))
+    else:
+        # v2: zero-init + two masked fills (the paper's "After" block)
+        m2 = (~cond1) & cond2
+        sch_re = jnp.where(cond1, sch1_re, 0.0)
+        sch_im = jnp.where(cond1, sch1_im, 0.0)
+        ssx_re = jnp.where(cond1, ssx1_re, jnp.where(m2, ssx2_re, 0.0))
+        ssx_im = jnp.where(cond1, ssx1_im, jnp.where(m2, ssx2_im, 0.0))
+    return sch_re, sch_im, ssx_re, ssx_im
+
+
+# ---------------------------------------------------------------------------
+# v0–v3: stream over igp (collapse(3) analogue), differ in instruction mix
+# ---------------------------------------------------------------------------
+
+def _gpp_igp_stream(inputs: Dict, *, use_div, use_abs, three_way,
+                    hoist: bool = False) -> Tuple[jax.Array, jax.Array]:
+    f = _f32(inputs)
+    nw, nbands = f["wx"].shape
+    vcoul = f["vcoul"]
+
+    def per_igp(carry, igp_slices):
+        ach_re, ach_im, asx_re, asx_im = carry
+        wt_re, wt_im, eps_re, eps_im, am_re, am_im = igp_slices  # (ig,),(band,)
+        wt2_re, wt2_im = _cmul(wt_re, wt_im, wt_re, wt_im)
+        om2_re, om2_im = _cmul(wt2_re, wt2_im, eps_re, eps_im)
+
+        # mat(ig, band) = conj(aqsm[igp,band]) * aqsn[ig,band]
+        mat_re, mat_im = _cmul(f["aqsn_re"], f["aqsn_im"],
+                               am_re[None, :], -am_im[None, :])
+        wre = vcoul[:, None] * mat_re
+        wim = vcoul[:, None] * mat_im
+
+        for iw in range(nw):
+            wxv = f["wx"][iw]                              # (band,)
+            sch_re, sch_im, ssx_re, ssx_im = _body(
+                wxv[None, :], wt_re[:, None], wt_im[:, None],
+                eps_re[:, None], eps_im[:, None],
+                wt2_re[:, None], wt2_im[:, None],
+                om2_re[:, None], om2_im[:, None],
+                use_div=use_div, use_abs=use_abs, three_way=three_way)
+            cr, ci = _cmul(wre, wim, sch_re, sch_im)
+            ach_re = ach_re.at[iw].add(jnp.sum(cr))
+            ach_im = ach_im.at[iw].add(jnp.sum(ci))
+            cr, ci = _cmul(wre, wim, ssx_re, ssx_im)
+            asx_re = asx_re.at[iw].add(jnp.sum(cr))
+            asx_im = asx_im.at[iw].add(jnp.sum(ci))
+        return (ach_re, ach_im, asx_re, asx_im), None
+
+    z = jnp.zeros(nw, jnp.float32)
+    slices = (f["wtilde_re"].T, f["wtilde_im"].T, f["eps_re"].T,
+              f["eps_im"].T, f["aqsm_re"], f["aqsm_im"])
+    (ar, ai, xr, xi), _ = jax.lax.scan(per_igp, (z, z, z, z), slices)
+    return ar + 1j * ai, xr + 1j * xi
+
+
+# ---------------------------------------------------------------------------
+# v4/v5: serialize band (scan over band blocks), (ig,igp) planes held hot
+# ---------------------------------------------------------------------------
+
+def _gpp_band_blocked(inputs: Dict, *, band_block: int = 32,
+                      hoist_iw: bool = True) -> Tuple[jax.Array, jax.Array]:
+    f = _f32(inputs)
+    nw, nbands = f["wx"].shape
+    band_block = min(band_block, nbands)
+    while nbands % band_block:
+        band_block //= 2
+    nblk = nbands // band_block
+    vcoul = f["vcoul"]
+
+    wt_re, wt_im = f["wtilde_re"], f["wtilde_im"]          # (ig, igp)
+    eps_re, eps_im = f["eps_re"], f["eps_im"]
+    # v5: hoist band/iw-invariant subexpressions out of all loops
+    wt2_re, wt2_im = _cmul(wt_re, wt_im, wt_re, wt_im)
+    om2_re, om2_im = _cmul(wt2_re, wt2_im, eps_re, eps_im)
+
+    def per_block(carry, blk):
+        ach_re, ach_im, asx_re, asx_im = carry
+        an_re, an_im, am_re, am_im, wxb = blk
+        # an: (bb, ig); am: (bb, igp); wx: (nw, bb)
+
+        def per_band(carry2, b):
+            ach_re, ach_im, asx_re, asx_im = carry2
+
+            def make_mat():
+                mr, mi = _cmul(an_re[b][:, None], an_im[b][:, None],
+                               am_re[b][None, :], -am_im[b][None, :])
+                return vcoul[:, None] * mr, vcoul[:, None] * mi
+
+            if hoist_iw:
+                # v5: mat(ig,igp) computed once, reused across iw
+                wre, wim = make_mat()
+            for iw in range(nw):
+                if not hoist_iw:
+                    # v4: mat recomputed per iw (pre-hoist redundancy)
+                    wre, wim = make_mat()
+                sch_re, sch_im, ssx_re, ssx_im = _body(
+                    wxb[iw, b], wt_re, wt_im, eps_re, eps_im,
+                    wt2_re, wt2_im, om2_re, om2_im,
+                    use_div=False, use_abs=False, three_way=False)
+                cr, ci = _cmul(wre, wim, sch_re, sch_im)
+                ach_re = ach_re.at[iw].add(jnp.sum(cr))
+                ach_im = ach_im.at[iw].add(jnp.sum(ci))
+                cr, ci = _cmul(wre, wim, ssx_re, ssx_im)
+                asx_re = asx_re.at[iw].add(jnp.sum(cr))
+                asx_im = asx_im.at[iw].add(jnp.sum(ci))
+            return (ach_re, ach_im, asx_re, asx_im), None
+
+        carry, _ = jax.lax.scan(per_band, carry, jnp.arange(band_block))
+        return carry, None
+
+    z = jnp.zeros(nw, jnp.float32)
+    blocks = (
+        f["aqsn_re"].T.reshape(nblk, band_block, -1),
+        f["aqsn_im"].T.reshape(nblk, band_block, -1),
+        f["aqsm_re"].T.reshape(nblk, band_block, -1),
+        f["aqsm_im"].T.reshape(nblk, band_block, -1),
+        f["wx"].reshape(nw, nblk, band_block).transpose(1, 0, 2),
+    )
+    (ar, ai, xr, xi), _ = jax.lax.scan(per_block, (z, z, z, z), blocks)
+    return ar + 1j * ai, xr + 1j * xi
+
+
+# ---------------------------------------------------------------------------
+# public variant table
+# ---------------------------------------------------------------------------
+
+v0 = functools.partial(_gpp_igp_stream, use_div=True, use_abs=True,
+                       three_way=True)
+v1 = functools.partial(_gpp_igp_stream, use_div=False, use_abs=True,
+                       three_way=True)
+v2 = functools.partial(_gpp_igp_stream, use_div=False, use_abs=True,
+                       three_way=False)
+v3 = functools.partial(_gpp_igp_stream, use_div=False, use_abs=False,
+                       three_way=False)
+v4 = functools.partial(_gpp_band_blocked, hoist_iw=False)
+v5 = functools.partial(_gpp_band_blocked, hoist_iw=True)
+
+VARIANTS = {"v0": v0, "v1": v1, "v2": v2, "v3": v3, "v4": v4, "v5": v5}

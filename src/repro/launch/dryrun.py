@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# This is the ONLY entry point that forces 512 host devices (dry-run only).
+
+"""Multi-pod dry-run launcher.
+
+For every (architecture x input-shape) cell this lowers + compiles the
+appropriate step (train_step / prefill_step / serve_step) against the
+production mesh — (16,16)=256 chips single-pod, (2,16,16)=512 chips
+multi-pod — and records:
+
+  * compiled.memory_analysis()  (proves the cell fits 16 GiB/chip),
+  * compiled.cost_analysis()    (FLOPs / bytes for §Roofline),
+  * parsed collective bytes by kind (hlo_analysis),
+  * the three roofline terms + dominant bottleneck (core.roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k
+  python -m repro.launch.dryrun --all                 # 16x16 baseline table
+  python -m repro.launch.dryrun --all --multi-pod     # 2x16x16 proof
+  python -m repro.launch.dryrun --all --both
+Results land in runs/dryrun/*.json (read by benchmarks & EXPERIMENTS.md).
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import (SHAPES, ARCH_IDS, applicable_shapes,
+                                get_config)
+from repro.core import roofline
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model
+from repro.train import step as step_lib
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "runs", "dryrun")
+
+
+def model_flops_for_cell(cfg, shape_name: str) -> float:
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch          # one decode step
+
+
+def auto_microbatches(cfg, shape, mesh) -> int:
+    """Pick grad-accumulation depth so the scan-saved per-layer hidden
+    states stay ~<=2.5 GiB/chip (the dominant train-time residency)."""
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    b_local = max(1, shape.global_batch // dp)
+    saved = cfg.n_layers * b_local * shape.seq_len * cfg.d_model * 2
+    target = 2.5 * 2 ** 30
+    mb = 1
+    while saved / mb > target and mb < b_local:
+        mb *= 2
+    return mb
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, fsdp=None,
+               kv_seq_shard=None, remat=None, grad_compress="none",
+               microbatches=None, ssm_impl=None):
+    """Build + lower + compile one cell. Returns (compiled, lowered, plan)."""
+    import dataclasses as dc
+    cfg = get_config(arch)
+    if remat is not None:
+        cfg = dc.replace(cfg, remat=remat)
+    if ssm_impl is not None:
+        cfg = dc.replace(cfg, ssm_impl=ssm_impl)
+    # NOTE: `flash` does NOT set cfg.use_flash_attention for the lowering —
+    # the Pallas kernel's interpret-mode HLO misstates its traffic (full-
+    # array loop-carry copies). The cell is lowered with the XLA attention
+    # and the roofline is adjusted analytically in run_cell (the same
+    # deterministic-BlockSpec-traffic methodology as the GPP journey).
+    model = build_model(cfg)
+    cell = specs_lib.input_specs(cfg, shape_name)
+    kind = cell["kind"]
+    plan = step_lib.make_plan(cfg, mesh, kind=kind, fsdp=fsdp,
+                              kv_seq_shard=kv_seq_shard)
+
+    with jax.set_mesh(mesh):
+        if kind == "train":
+            if microbatches is None:
+                microbatches = auto_microbatches(cfg, SHAPES[shape_name], mesh)
+            bundle, _ = step_lib.build_train_step(
+                model, plan, grad_compress=grad_compress,
+                microbatches=microbatches)
+            from repro.dist.sharding import batch_shardings
+            bs = batch_shardings(plan, cell["batch"])
+            bundle.in_shardings = (bundle.in_shardings[0],
+                                   bundle.in_shardings[1], bs)
+            lowered = bundle.lower(None, None, cell["batch"])
+        elif kind == "prefill":
+            bundle = step_lib.build_prefill_step(model, plan)
+            from repro.dist.sharding import batch_shardings
+            bs = batch_shardings(plan, cell["batch"])
+            bundle.in_shardings = (bundle.in_shardings[0], bs)
+            lowered = bundle.lower(None, cell["batch"])
+        else:
+            bundle = step_lib.build_decode_step(model, plan, cell["cache"])
+            from repro.dist.sharding import batch_shardings
+            bs = batch_shardings(plan, cell["batch"])
+            bundle.in_shardings = (bundle.in_shardings[0],
+                                   bundle.in_shardings[1], bs["tokens"])
+            lowered = bundle.lower(None, None, cell["batch"]["tokens"])
+        compiled = lowered.compile()
+    return compiled, lowered, plan
+
+
+def _donated_bytes(arch, shape_name, mesh, plan) -> int:
+    """Per-chip bytes of donated step inputs (params+opt for train, cache
+    for decode) under their shardings."""
+    import numpy as np
+    from repro.dist import sharding as shd
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    cell = specs_lib.input_specs(cfg, shape_name)
+    total = 0
+
+    def add(abstract, shardings):
+        nonlocal total
+        flat = jax.tree.leaves(abstract)
+        shs = jax.tree.leaves(shardings,
+                              is_leaf=lambda x: hasattr(x, "spec"))
+        for ab, sh in zip(flat, shs):
+            n = int(np.prod(ab.shape)) * ab.dtype.itemsize if ab.shape else                 ab.dtype.itemsize
+            div = 1
+            for axes in sh.spec:
+                if axes is None:
+                    continue
+                for a in (axes if isinstance(axes, tuple) else (axes,)):
+                    div *= mesh.shape[a]
+            total += n // max(div, 1)
+
+    ab_params = model.abstract_params()
+    ps = shd.params_shardings(plan, model.param_axes, ab_params)
+    if cell["kind"] == "train":
+        add(ab_params, ps)
+        from repro.optim.adafactor import make_optimizer
+        from repro.train.step import _opt_state_shardings
+        opt = make_optimizer(cfg.optimizer, lambda s: 1e-4)
+        ab_opt, os_ = _opt_state_shardings(plan, model, opt, ab_params, ps)
+        add(ab_opt, os_)
+    elif cell["kind"] == "decode":
+        cs = shd.cache_shardings(plan, model.cache_axes(), cell["cache"])
+        add(cell["cache"], cs)
+    return total
+
+
+def flash_adjustment(cfg, shape_name: str, mesh, plan) -> dict:
+    """Analytic traffic delta for replacing the XLA attention score chain
+    with the Pallas flash kernel (kernels/flash).
+
+    XLA path per layer-pass per chip: the (B,KvH,G,Sq,Skv) f32 score tensor
+    is materialized ~3x (scores+mask, softmax, probs) = c*B*H*Sq*Skv*4 B.
+    Flash path: q/out streamed once; k/v re-fetched once per q block
+    (n_q = Sq/BLK_Q revisits) — deterministic from the BlockSpecs.
+    Passes: train = fwd + remat-fwd + bwd(dq) + bwd(dkv) = 4; prefill = 1.
+    """
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode" or cfg.family in ("ssm",):
+        return {"score_bytes": 0.0, "flash_bytes": 0.0}
+    tp = mesh.shape["model"]
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    b_loc = max(1, shape.global_batch // dp)
+    h_loc = cfg.n_heads // tp if cfg.n_heads % tp == 0 and         cfg.n_kv_heads % tp == 0 else cfg.n_heads
+    kv_loc = max(1, h_loc * cfg.n_kv_heads // cfg.n_heads)
+    sq = skv = shape.seq_len
+    layers = cfg.n_layers
+    passes = 4.0 if shape.kind == "train" else 1.0
+    causal_frac = 0.5 if shape.kind in ("train", "prefill") else 1.0
+    c_mat = 3.0                                   # score-chain materializations
+    score = passes * layers * c_mat * b_loc * h_loc * sq * skv * 4 * causal_frac
+    blk_q = 256
+    n_q = sq // blk_q
+    qo = 2 * b_loc * h_loc * sq * cfg.head_dim * 2          # q + out
+    kv = 2 * b_loc * kv_loc * skv * cfg.head_dim * 2 * n_q * causal_frac
+    flash = passes * layers * (qo + kv)
+    return {"score_bytes": float(score), "flash_bytes": float(flash)}
+
+
+def ssm_kernel_adjustment(cfg, shape_name: str, mesh) -> float:
+    """Analytic HBM traffic of the Pallas selective-scan kernel
+    (kernels/ssm/ssm_scan.kernel_hbm_bytes), per chip per step — added back
+    when the cell is lowered with ssm_impl="stub" (the kernel replaces the
+    stubbed scan 1:1; equivalence proven by tests/test_ssm_kernel.py)."""
+    from repro.kernels.ssm.ssm_scan import kernel_hbm_bytes
+    shape = SHAPES[shape_name]
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            dp *= mesh.shape[a]
+    b_loc = max(1, shape.global_batch // dp)
+    ci = 2 * cfg.d_model
+    passes = 4.0 if shape.kind == "train" else 1.0
+    per_layer = kernel_hbm_bytes(b_loc, shape.seq_len, ci, cfg.ssm_state)
+    return passes * cfg.n_layers * per_layer
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             save: bool = True, verbose: bool = True, flash: bool = False,
+             ssm_kernel: bool = False, **kw):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_shape = tuple(mesh.shape[a] for a in mesh.axis_names)
+    cfg = get_config(arch)
+    if ssm_kernel:
+        kw = dict(kw, ssm_impl="stub")
+    t0 = time.time()
+    compiled, lowered, plan = lower_cell(arch, shape_name, mesh, **kw)
+    compile_s = time.time() - t0
+
+    rep = roofline.analyze_compiled(
+        f"{arch}/{shape_name}", compiled, mesh_shape,
+        model_flops_total=model_flops_for_cell(cfg, shape_name))
+    from repro.core.hw import TPU_V5E
+    if flash:
+        adj = flash_adjustment(cfg, shape_name, mesh, plan)
+        new_bytes = max(0.0, rep.bytes_per_chip - adj["score_bytes"]
+                        + adj["flash_bytes"])
+        rep.bytes_per_chip = new_bytes
+        rep.memory_s = new_bytes / TPU_V5E.hbm_bw
+        rep.extra["flash_adjustment"] = adj
+    if ssm_kernel:
+        kb = ssm_kernel_adjustment(cfg, shape_name, mesh)
+        rep.bytes_per_chip += kb
+        rep.memory_s = rep.bytes_per_chip / TPU_V5E.hbm_bw
+        rep.extra["ssm_kernel_bytes"] = kb
+    row = rep.row()
+    # CPU XLA implements neither input-output aliasing (donation) nor
+    # in-place dynamic-update-slice, so donated buffers (params+opt in
+    # train, the KV cache in decode) are double/triple counted in temp.
+    # hbm_adjusted removes the donated duplicates — the TPU-resident figure.
+    donated = _donated_bytes(arch, shape_name, mesh, plan)
+    kind = specs_lib.input_specs(cfg, shape_name)["kind"]
+    dup = donated * (2 if kind == "decode" else 1)
+    adjusted = max(0, (rep.device_memory_bytes or 0) - dup)
+    row.update(
+        multi_pod=multi_pod,
+        compile_s=compile_s,
+        collective_by_kind=rep.extra["collective_bytes_by_kind"],
+        collective_counts=rep.extra["collective_count_by_kind"],
+        fsdp=plan.fsdp, kv_seq_shard=plan.kv_seq_shard, flash=flash,
+        ssm_kernel=ssm_kernel,
+        donated_gib=donated / 2 ** 30,
+        hbm_adjusted_gib=adjusted / 2 ** 30,
+        fits_hbm=bool(adjusted < 16 * 2 ** 30),
+    )
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[{arch} x {shape_name} mesh={mesh_shape}] "
+              f"compile={compile_s:.1f}s "
+              f"mem/chip={(rep.device_memory_bytes or 0)/2**30:.2f}GiB "
+              f"terms: compute={rep.compute_s:.4g}s memory={rep.memory_s:.4g}s "
+              f"collective={rep.collective_s:.4g}s dominant={rep.dominant} "
+              f"useful={rep.useful_flops_ratio and f'{rep.useful_flops_ratio:.2f}'}")
+        print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f} "
+              f"out={ma.output_size_in_bytes/2**30:.2f} "
+              f"temp={ma.temp_size_in_bytes/2**30:.2f} GiB")
+        print(f"  collectives: {row['collective_by_kind']}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        tag = "multi" if multi_pod else "single"
+        path = os.path.join(OUT_DIR, f"{arch}__{shape_name}__{tag}.json")
+        with open(path, "w") as fh:
+            json.dump(row, fh, indent=1, default=float)
+    return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true",
+                    help="run each cell on both meshes")
+    ap.add_argument("--fsdp", type=int, default=None)
+    ap.add_argument("--kv-seq-shard", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--grad-compress", default="none")
+    ap.add_argument("--flash", action="store_true",
+                    help="use the Pallas flash-attention kernel")
+    args = ap.parse_args()
+
+    kw = dict(fsdp=None if args.fsdp is None else bool(args.fsdp),
+              kv_seq_shard=(None if args.kv_seq_shard is None
+                            else bool(args.kv_seq_shard)),
+              remat=args.remat, grad_compress=args.grad_compress)
+    flash = args.flash
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for sh in applicable_shapes(get_config(arch)):
+                cells.append((arch, sh))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    pods = [args.multi_pod] if not args.both else [False, True]
+    failures = []
+    for arch, sh in cells:
+        for mp in pods:
+            try:
+                run_cell(arch, sh, multi_pod=mp, flash=flash, **kw)
+            except Exception as e:
+                failures.append((arch, sh, mp, repr(e)))
+                print(f"FAIL [{arch} x {sh} multi_pod={mp}]: {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"\nall {len(cells) * len(pods)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

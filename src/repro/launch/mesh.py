@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run forces 512 host
+devices via XLA_FLAGS before any jax import, while tests/benches must see
+the single real CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16,16) = 256 chips, axes (data, model).
+    Multi-pod:  (2,16,16) = 512 chips, axes (pod, data, model) — `pod` is
+    DP across the inter-pod DCN; gradient all-reduce crosses it once/step."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(model: int = 4, data: int = 2, *, multi_pod: bool = False):
+    """Small mesh for CPU-host testing (8 forced host devices)."""
+    if multi_pod:
+        return jax.make_mesh((2, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

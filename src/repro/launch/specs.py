@@ -1,0 +1,67 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+No device allocation — these drive jit(...).lower() in the dry-run and the
+roofline table. The modality frontends are STUBS per the assignment:
+whisper gets precomputed frame embeddings, internvl2 precomputed patch
+embeddings (DESIGN.md §Arch-applicability).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.models.layers import PARAM_DTYPE
+from repro.models.registry import make_cache
+
+PyTree = Any
+
+
+def _s(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": _s((b, cfg.enc_seq, cfg.d_model), PARAM_DTYPE),
+                "tokens": _s((b, s)), "labels": _s((b, s))}
+    if cfg.family == "vlm":
+        st = s - cfg.n_vis_tokens          # text tokens; total positions = s
+        return {"vis": _s((b, cfg.n_vis_tokens, cfg.d_model), PARAM_DTYPE),
+                "tokens": _s((b, st)), "labels": _s((b, st))}
+    return {"tokens": _s((b, s)), "labels": _s((b, s))}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        return {"frames": _s((b, cfg.enc_seq, cfg.d_model), PARAM_DTYPE),
+                "tokens": _s((b, s))}
+    if cfg.family == "vlm":
+        return {"vis": _s((b, cfg.n_vis_tokens, cfg.d_model), PARAM_DTYPE),
+                "tokens": _s((b, s - cfg.n_vis_tokens))}
+    return {"tokens": _s((b, s))}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[Dict, PyTree]:
+    """(token specs, abstract cache) for one serve_step against a cache of
+    the cell's seq_len."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = make_cache(cfg, b, s, abstract=True)
+    return {"tokens": _s((b, 1))}, cache
+
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """Dispatch per the cell kind. Returns a dict describing what the cell
+    lowers: {"kind", "batch", "cache"(decode only)}."""
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"kind": "train", "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"kind": "prefill", "batch": prefill_batch_specs(cfg, shape)}
+    batch, cache = decode_specs(cfg, shape)
+    return {"kind": "decode", "batch": batch, "cache": cache}

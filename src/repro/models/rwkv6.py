@@ -1,0 +1,123 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay
+(arXiv:2404.05892) + channel-mix.
+
+Two WKV evaluators:
+  * `wkv6_scan`     — sequential lax.scan over time (the oracle; also the
+                      decode path, where it is exact and O(1) per token);
+  * `wkv6_chunked`  — chunked parallel form (GLA-style): within a chunk the
+                      per-channel cumulative decays turn the recurrence into
+                      a masked matmul; across chunks only the (H, Dk, Dv)
+                      state is carried. This is the train/prefill path — it
+                      converts VPU-bound recurrence into MXU matmuls, which
+                      is exactly the paper's v4 "raise arithmetic intensity"
+                      move applied to an SSM (see DESIGN.md).
+
+Recurrence (per head, k-dim i, v-dim j):
+    y_t[j] = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] k_t[i] v_t[j])
+    S_t    = diag(w_t) S_{t-1} + k_t v_t^T ,  w_t = exp(-exp(wlog_t))
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import PARAM_DTYPE
+
+
+def wkv6_scan(r, k, v, w, u, state):
+    """Sequential oracle. r/k/v/w: (B,T,H,D) f32; u: (H,D); state: (B,H,D,D).
+    Returns (y (B,T,H,D), new_state). All math f32."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                       # (B,H,D)
+        kv = kt[..., :, None] * vt[..., None, :]   # (B,H,Dk,Dv)
+        y = jnp.einsum("bhi,bhij->bhj", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, y
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def wkv6_chunked(r, k, v, w, u, state, *, chunk: int = 64):
+    """Chunked parallel WKV6. Same signature/semantics as wkv6_scan.
+
+    Within a chunk (length C) with cumulative log-decay La_t = sum_{s<=t} log w_s:
+      inter:  y_t += (r_t * exp(La_{t-1})) @ S_0
+      intra:  y_t += sum_{s<t} [r_t . (exp(La_{t-1}-La_s) * k_s)] v_s
+      bonus:  y_t += (r_t . (u * k_t)) v_t
+      carry:  S_C = diag(exp(La_C)) S_0 + sum_s (exp(La_C - La_s) * k_s) v_s^T
+    """
+    b, t, h, d = r.shape
+    assert t % chunk == 0, (t, chunk)
+    n = t // chunk
+
+    def resh(x):
+        return x.reshape(b, n, chunk, h, d).transpose(1, 0, 3, 2, 4)  # (n,B,H,C,D)
+
+    rc, kc, vc, wc = map(resh, (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    la = jnp.cumsum(logw, axis=3)                          # (n,B,H,C,D) inclusive
+    # stability clamp (see mamba.ssm_chunked): keeps exp(-la) finite in f32;
+    # pairwise decay factors stay correct to ~e-60 absolute.
+    la = jnp.maximum(la, -60.0)
+
+    def one_chunk(s, inp):
+        rcc, kcc, vcc, lac = inp                           # (B,H,C,D)
+        # exclusive cumulative decay (shift right by one step)
+        la_excl = jnp.pad(lac[:, :, :-1], ((0, 0), (0, 0), (1, 0), (0, 0)))
+        r_t = rcc * jnp.exp(la_excl)                       # r-tilde
+        k_s = kcc * jnp.exp(-lac)                          # k-tilde
+        # inter-chunk: contribution of the carried state
+        y = jnp.einsum("bhcd,bhde->bhce", r_t, s)
+        # intra-chunk: strictly-lower-triangular "attention" matmul (MXU)
+        att = jnp.einsum("bhcd,bhsd->bhcs", r_t, k_s)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        att = jnp.where(mask[None, None], att, 0.0)
+        y = y + jnp.einsum("bhcs,bhse->bhce", att, vcc)
+        # bonus (current token, u-weighted)
+        bonus = jnp.sum(rcc * u[None, :, None, :] * kcc, -1, keepdims=True)
+        y = y + bonus * vcc
+        # carry the state across the chunk boundary
+        la_last = lac[:, :, -1:, :]                        # (B,H,1,D)
+        k_carry = kcc * jnp.exp(la_last - lac)             # (B,H,C,D)
+        s = jnp.exp(la_last[:, :, 0, :, None]) * s + \
+            jnp.einsum("bhcd,bhce->bhde", k_carry, vcc)
+        return s, y
+
+    state, ys = jax.lax.scan(one_chunk, state, (rc, kc, vc, la))
+    ys = ys.transpose(1, 0, 3, 2, 4).reshape(b, t, h, d)   # back to (B,T,H,D)
+    return ys, state
+
+
+def wkv6_decode(r, k, v, w, u, state):
+    """One-token decode. r/k/v/w: (B,H,D); state (B,H,Dk,Dv) f32."""
+    kv = k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhi,bhij->bhj", r, state + u[None, :, :, None] * kv)
+    state = w[..., :, None] * state + kv
+    return y, state
+
+
+# ---------------------------------------------------------------------------
+# full RWKV6 block (time-mix + channel-mix) — used by transformer.py
+# ---------------------------------------------------------------------------
+
+LORA_MIX = 32     # TIME_MIX_EXTRA_DIM
+LORA_DECAY = 64   # TIME_DECAY_EXTRA_DIM
+
+
+def ddlerp(x, x_prev, mu, lora_a, lora_b):
+    """Data-dependent lerp (the Finch token-shift). x,x_prev: (B,T,D)."""
+    diff = x_prev - x
+    xx = x + diff * mu[0]
+    delta = jnp.tanh(xx.astype(jnp.float32) @ lora_a.astype(jnp.float32))
+    delta = (delta @ lora_b.astype(jnp.float32)).astype(x.dtype)
+    return x + diff * (mu[1] + delta)
+
+
+def token_shift(x, shift_state):
+    """x: (B,T,D); shift_state: (B,D) = last token of previous segment."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1]], axis=1)
+    return prev, x[:, -1]

@@ -1,0 +1,104 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+The distributed-optimization workhorse for the biggest assigned configs
+(llama4-maverick 0.77T total, qwen2.5-32b, internvl2-26b): optimizer state
+for a (n, m) matrix is O(n+m) instead of O(n*m), which is what lets the
+train_4k cell fit 16 GiB/chip at 256 chips (DESIGN.md §3.1).
+
+Implementation: factored for rank>=2 leaves (row/col running means of
+squared grads over the last two dims), full second moment for vectors;
+update clipping (RMS threshold d=1.0), relative step size off (we pass an
+external schedule), no first moment (beta1=0) by default.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import clip_by_global_norm
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    lr_fn: Callable[[jax.Array], jax.Array]
+    decay: float = 0.8            # \hat\beta_2t exponent base
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    max_grad_norm: float = 1.0
+
+    def _factored(self, shape) -> bool:
+        return len(shape) >= 2
+
+    def init(self, params: PyTree) -> PyTree:
+        def leaf(p):
+            if self._factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def abstract_state(self, params: PyTree) -> PyTree:
+        def leaf(p):
+            if self._factored(p.shape):
+                return {"vr": jax.ShapeDtypeStruct(p.shape[:-1], jnp.float32),
+                        "vc": jax.ShapeDtypeStruct(p.shape[:-2] + p.shape[-1:],
+                                                   jnp.float32)}
+            return {"v": jax.ShapeDtypeStruct(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def update(self, params: PyTree, grads: PyTree, state: PyTree
+               ) -> Tuple[PyTree, PyTree, dict]:
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        lr = self.lr_fn(step)
+        beta2 = 1.0 - step.astype(jnp.float32) ** (-self.decay)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + self.eps
+            if self._factored(p.shape):
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                     self.eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v)
+                new_s = {"v": v}
+            # update clipping (RMS(u) <= d)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            newp = p.astype(jnp.float32) - lr * (
+                u + self.weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), new_s
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_s = treedef.flatten_up_to(state["f"])
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_f = treedef.unflatten([o[1] for o in out])
+        return new_p, {"f": new_f, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr}
+
+
+def make_optimizer(name: str, lr_fn) :
+    from repro.optim.adamw import AdamW
+    if name == "adamw":
+        return AdamW(lr_fn=lr_fn)
+    if name == "adafactor":
+        return Adafactor(lr_fn=lr_fn)
+    raise ValueError(name)

@@ -1,0 +1,79 @@
+"""AdamW, built from scratch on pytrees (no optax).
+
+State: {"m": tree f32, "v": tree f32, "step": i32}. m/v inherit the param
+sharding (same logical axes), so under FSDP the optimizer state is sharded
+too (ZeRO-style for free via the sharding engine).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> Tuple[PyTree, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr_fn: Callable[[jax.Array], jax.Array]
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+
+    def init(self, params: PyTree) -> PyTree:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def abstract_state(self, params: PyTree) -> PyTree:
+        z = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    def update(self, params: PyTree, grads: PyTree, state: PyTree
+               ) -> Tuple[PyTree, PyTree, dict]:
+        grads, gnorm = clip_by_global_norm(grads, self.max_grad_norm)
+        step = state["step"] + 1
+        lr = self.lr_fn(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mh = m / c1
+            vh = v / c2
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return newp.astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v, "step": step}, \
+            {"grad_norm": gnorm, "lr": lr}

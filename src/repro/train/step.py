@@ -1,0 +1,225 @@
+"""Train / serve step builders: model + optimizer + sharding plan -> jit-able
+step functions with explicit in/out shardings (the objects the dry-run lowers
+and the trainer executes).
+
+Gradient sync is implicit: params are replicated (or FSDP-sharded) over the
+dp axes, so XLA inserts the reduce-scatter/all-reduce automatically; with
+grad_compress="bf16" gradients are cast before sync so the all-reduce moves
+half the bytes (optimizer math stays f32).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist import sharding as shd
+from repro.models.layers import DistCtx
+from repro.models.registry import Model
+from repro.optim.adafactor import make_optimizer
+from repro.optim.schedule import linear_warmup_cosine
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A lowered-able step: jit(fn, in_shardings=..., out_shardings=...)."""
+    fn: Callable
+    in_shardings: Tuple
+    out_shardings: Any
+    abstract_args: Tuple
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self, *overrides):
+        args = tuple(o if o is not None else a
+                     for o, a in zip(overrides, self.abstract_args)) \
+            if overrides else self.abstract_args
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        return jitted.lower(*args)
+
+
+def make_plan(cfg: ModelConfig, mesh, *, kind: str,
+              fsdp: Optional[bool] = None,
+              kv_seq_shard: Optional[bool] = None,
+              ep_data: Optional[bool] = None) -> shd.ShardingPlan:
+    """Default sharding policy per arch size & cell kind (overridable).
+
+    MoE: experts shard over `data` (EP — weights stay resident, tokens
+    move) instead of FSDP, whose stacked-weight all-gather gets hoisted
+    outside the layer scan by XLA (measured: llama4 prefill collective
+    717s -> see EXPERIMENTS.md §Perf). Dense >8B params: FSDP in training
+    (optimizer+grads sharded); serving is TP-only (params fit) to avoid
+    per-layer gathers.
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if ep_data is None:
+        ep_data = cfg.family == "moe"
+    if fsdp is None:
+        big = cfg.param_count() > 8e9
+        fsdp = big and kind == "train" and not ep_data
+    if kv_seq_shard is None:
+        # distributed flash-decode for long caches on attention archs
+        kv_seq_shard = kind == "decode" and cfg.family in (
+            "dense", "moe", "vlm", "encdec")
+    return shd.ShardingPlan(mesh=mesh, dp_axes=dp_axes, fsdp=fsdp,
+                            kv_seq_shard=kv_seq_shard, ep_data=ep_data)
+
+
+def make_dist_ctx(plan: shd.ShardingPlan) -> DistCtx:
+    return DistCtx(mesh=plan.mesh, data_axes=plan.dp_axes,
+                   model_axis=plan.tp_axis, kv_seq_shard=plan.kv_seq_shard,
+                   ep_data=plan.ep_data)
+
+
+def _param_shardings(model: Model, plan):
+    ab = model.abstract_params()
+    return ab, shd.params_shardings(plan, model.param_axes, ab)
+
+
+def _opt_state_shardings(plan, model: Model, opt, ab_params, ps_tree):
+    """m/v (AdamW) inherit the param leaf sharding; adafactor vr drops the
+    last param dim's axes, vc the second-last (state shapes follow suit)."""
+    rep = NamedSharding(plan.mesh, P())
+    ab_opt = opt.abstract_state(ab_params)
+    if "m" in ab_opt:
+        return ab_opt, {"m": ps_tree, "v": ps_tree, "step": rep}
+
+    def build(node, path=""):
+        if isinstance(node, dict) and ("vr" in node or "v" in node):
+            axes = model.param_axes.get(path)
+            if "v" in node:
+                ax = axes or (None,) * len(node["v"].shape)
+                return {"v": NamedSharding(
+                    plan.mesh, shd.spec_for(plan, ax, node["v"].shape))}
+            ax = axes or (None,) * (len(node["vr"].shape) + 1)
+            vr_ax = ax[:-1]
+            vc_ax = ax[:-2] + ax[-1:]
+            return {
+                "vr": NamedSharding(plan.mesh, shd.spec_for(
+                    plan, vr_ax, node["vr"].shape)),
+                "vc": NamedSharding(plan.mesh, shd.spec_for(
+                    plan, vc_ax, node["vc"].shape)),
+            }
+        return {k: build(v, f"{path}/{k}" if path else k)
+                for k, v in node.items()}
+
+    return ab_opt, {"f": build(ab_opt["f"]), "step": rep}
+
+
+def build_train_step(model: Model, plan: shd.ShardingPlan, *,
+                     optimizer_name: Optional[str] = None,
+                     peak_lr: float = 3e-4, warmup: int = 2000,
+                     total_steps: int = 100_000,
+                     grad_compress: str = "none",
+                     microbatches: int = 1):
+    """Returns (StepBundle, optimizer). Step signature:
+    (params, opt_state, batch) -> (params, opt_state, metrics).
+
+    microbatches > 1 enables gradient accumulation: the global batch is
+    split along dim 0 and scanned, with an f32 grad accumulator — the
+    standard way to keep per-microbatch activations inside the HBM budget
+    (activation footprint scales 1/microbatches at fixed global batch).
+    """
+    cfg = model.cfg
+    opt = make_optimizer(
+        optimizer_name or cfg.optimizer,
+        functools.partial(linear_warmup_cosine, peak_lr=peak_lr,
+                          warmup=warmup, total=total_steps))
+    ctx = make_dist_ctx(plan)
+
+    def grad_fn(params, batch):
+        def loss_fn(p):
+            return model.loss_fn(p, batch, ctx)
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            # shard-preserving split: keep the SHARDED batch dim outer
+            # ((B//n, n, ...) then swap) so every microbatch spans all data
+            # shards — a naive (n, B//n, ...) reshape would put each
+            # microbatch on 1/n of the data axis and force resharding.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            mb_spec = NamedSharding(plan.mesh, P(plan.dp_axes))
+
+            def split(x):
+                y = x.reshape((x.shape[0] // microbatches, microbatches)
+                              + x.shape[1:]).swapaxes(0, 1)
+                return y
+
+            ub = jax.tree.map(split, batch)
+
+            def body(acc, mb):
+                mb = jax.tree.map(
+                    lambda x: jax.lax.with_sharding_constraint(
+                        x, NamedSharding(plan.mesh,
+                                         P(plan.dp_axes,
+                                           *([None] * (x.ndim - 1))))), mb)
+                (loss, metrics), grads = grad_fn(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                    acc, grads)
+                return acc, (loss, metrics)
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, ms) = jax.lax.scan(body, zero, ub)
+            loss = losses.mean()
+            metrics = jax.tree.map(lambda m: m.mean(), ms)
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        if grad_compress == "bf16":
+            grads = jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads)
+        new_params, new_opt_state, opt_metrics = opt.update(
+            params, grads, opt_state)
+        metrics = {**metrics, **opt_metrics, "total_loss": loss}
+        return new_params, new_opt_state, metrics
+
+    ab_params, ps = _param_shardings(model, plan)
+    ab_opt, os_ = _opt_state_shardings(plan, model, opt, ab_params, ps)
+
+    bundle = StepBundle(
+        fn=train_step,
+        in_shardings=(ps, os_, None),
+        out_shardings=(ps, os_, None),
+        abstract_args=(ab_params, ab_opt, None),   # batch given at lower()
+        donate_argnums=(0, 1),
+    )
+    return bundle, opt
+
+
+def build_prefill_step(model: Model, plan: shd.ShardingPlan) -> StepBundle:
+    ctx = make_dist_ctx(plan)
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, ctx)
+
+    ab_params, ps = _param_shardings(model, plan)
+    return StepBundle(fn=prefill_step, in_shardings=(ps, None),
+                      out_shardings=None, abstract_args=(ab_params, None))
+
+
+def build_decode_step(model: Model, plan: shd.ShardingPlan,
+                      abstract_cache) -> StepBundle:
+    ctx = make_dist_ctx(plan)
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, ctx)
+
+    ab_params, ps = _param_shardings(model, plan)
+    cs = shd.cache_shardings(plan, model.cache_axes(), abstract_cache)
+    return StepBundle(
+        fn=decode_step,
+        in_shardings=(ps, cs, None),
+        out_shardings=(None, cs),
+        abstract_args=(ab_params, abstract_cache, None),
+        donate_argnums=(1,),
+    )

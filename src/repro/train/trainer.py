@@ -1,0 +1,130 @@
+"""Fault-tolerant training loop.
+
+Wires together: model + sharded train_step (train/step.py), data pipeline
+(prefetch), checkpoint manager (atomic + async + auto-resume), watchdog
+(straggler detection), heartbeat. The loop is restart-idempotent: kill it
+at any step, rerun the same command, and it resumes from the latest valid
+checkpoint with bit-identical data order (step-keyed batches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import (DataConfig, PrefetchIterator, TokenSource,
+                                 make_stub_frontend_batch)
+from repro.dist.fault import HeartbeatFile, StepWatchdog, resume_or_init
+from repro.dist.sharding import ShardingPlan, batch_shardings
+from repro.models.registry import build_model
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    ckpt_dir: str = "runs/ckpt"
+    seq_len: int = 512
+    global_batch: int = 8
+    peak_lr: float = 3e-4
+    microbatches: int = 1
+    grad_compress: str = "none"
+    seed: int = 0
+    token_file: Optional[str] = None
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, loop: TrainLoopConfig, mesh,
+                 *, fsdp: Optional[bool] = None):
+        self.cfg = cfg
+        self.loop = loop
+        self.mesh = mesh
+        self.model = build_model(cfg)
+        self.plan = step_lib.make_plan(cfg, mesh, kind="train", fsdp=fsdp)
+        self.bundle, self.opt = step_lib.build_train_step(
+            self.model, self.plan, peak_lr=loop.peak_lr,
+            total_steps=loop.total_steps, microbatches=loop.microbatches,
+            grad_compress=loop.grad_compress)
+        self.ckpt = CheckpointManager(loop.ckpt_dir)
+        self.watchdog = StepWatchdog(
+            on_straggler=lambda s, dt, ew: print(
+                f"[watchdog] step {s} took {dt:.2f}s (ewma {ew:.2f}s) — "
+                f"straggler; on a fleet this triggers re-slicing"))
+        self.heartbeat = HeartbeatFile(loop.ckpt_dir)
+
+    # ------------------------------------------------------------------ run
+
+    def run(self, *, verbose: bool = True) -> Dict[str, Any]:
+        loop = self.loop
+        model, plan = self.model, self.plan
+
+        ps = self.bundle.in_shardings[0]
+        os_ = self.bundle.in_shardings[1]
+
+        def init_state():
+            with jax.set_mesh(self.mesh):
+                params = jax.jit(
+                    model.init_params, out_shardings=ps)(
+                        jax.random.PRNGKey(loop.seed))
+                opt_state = jax.jit(
+                    self.opt.init, out_shardings=os_)(params)
+            return {"params": params, "opt": opt_state}
+
+        start_step, state = resume_or_init(
+            self.ckpt, init_state,
+            shardings={"params": ps, "opt": os_})
+        if verbose and start_step:
+            print(f"[trainer] resumed from step {start_step}")
+
+        data_cfg = DataConfig(seq_len=loop.seq_len,
+                              global_batch=loop.global_batch,
+                              vocab_size=self.cfg.vocab_size,
+                              seed=loop.seed, token_file=loop.token_file)
+        source = TokenSource(data_cfg)
+        it = PrefetchIterator(source, start_step=start_step)
+
+        step_fn = jax.jit(self.bundle.fn,
+                          in_shardings=self.bundle.in_shardings[:2] + (None,),
+                          out_shardings=self.bundle.out_shardings,
+                          donate_argnums=self.bundle.donate_argnums)
+
+        params, opt_state = state["params"], state["opt"]
+        metrics = {}
+        losses = []
+        try:
+            for step in range(start_step, loop.total_steps):
+                t0 = time.perf_counter()
+                data_step, batch = next(it)
+                assert data_step == step, (data_step, step)
+                batch = make_stub_frontend_batch(self.cfg, batch, loop.seed)
+                batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.watchdog.observe(step, dt)
+                self.heartbeat.beat(step)
+                losses.append(float(metrics["loss"]))
+                if verbose and step % loop.log_every == 0:
+                    print(f"step {step:5d} loss {losses[-1]:.4f} "
+                          f"gnorm {float(metrics['grad_norm']):.3f} "
+                          f"{dt*1e3:.0f} ms")
+                if (step + 1) % loop.ckpt_every == 0 or \
+                        step + 1 == loop.total_steps:
+                    self.ckpt.save(step + 1,
+                                   {"params": params, "opt": opt_state})
+        finally:
+            it.close()
+            self.ckpt.barrier()
+        return {"final_loss": losses[-1] if losses else None,
+                "losses": losses,
+                "stragglers": self.watchdog.stragglers,
+                "metrics": {k: float(np.asarray(v))
+                            for k, v in metrics.items()}}

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# src layout import without install; single real CPU device (the dry-run's
+# 512 forced host devices are scoped to launch/dryrun.py and the subprocess
+# tests ONLY — per the multi-pod dry-run contract).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

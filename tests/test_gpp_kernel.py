@@ -1,0 +1,158 @@
+"""GPP kernel correctness: every journey variant + the Pallas kernel
+(interpret mode) against the complex128 numpy oracle, across shape sweeps,
+plus hypothesis property tests on the kernel's algebraic invariants."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.gpp import ops, pallas_gpp, problem, ref, variants
+
+RTOL = 5e-5
+
+
+def _run_ref(inp):
+    return ref.ref_numpy(inp)
+
+
+def _rel(a, b):
+    return float(np.max(np.abs(np.asarray(a) - b)) / np.max(np.abs(b)))
+
+
+SIZES = [
+    problem.GppSize("s1", nbands=8, ngpown=8, ncouls=64),
+    problem.GppSize("s2", nbands=16, ngpown=4, ncouls=128),
+    problem.GppSize("s3", nbands=4, ngpown=16, ncouls=32),
+]
+
+
+@pytest.mark.parametrize("size", SIZES, ids=lambda s: s.name)
+@pytest.mark.parametrize("version", list(variants.VARIANTS))
+def test_variants_match_oracle(size, version):
+    inp = problem.make_inputs(size, seed=1)
+    ach, asx = _run_ref(inp)
+    a, x = jax.jit(variants.VARIANTS[version])(inp)
+    assert _rel(a, ach) < RTOL, version
+    assert _rel(x, asx) < RTOL, version
+
+
+@pytest.mark.parametrize("size", SIZES, ids=lambda s: s.name)
+@pytest.mark.parametrize("version", ["v6", "v7", "v8"])
+def test_pallas_matches_oracle(size, version):
+    cfg = pallas_gpp.CONFIGS[version]
+    cfg = dataclasses.replace(
+        cfg,
+        blk_ig=min(cfg.blk_ig, size.ncouls),
+        blk_igp=min(cfg.blk_igp, size.ngpown),
+        blk_band=min(cfg.blk_band, size.nbands))
+    inp = problem.make_inputs(size, seed=2)
+    ach, asx = _run_ref(inp)
+    a, x = pallas_gpp.gpp_pallas(inp, cfg, interpret=True)
+    assert _rel(a, ach) < RTOL
+    assert _rel(x, asx) < RTOL
+
+
+def test_pallas_block_shape_sweep():
+    size = problem.GppSize("sw", nbands=16, ngpown=16, ncouls=64)
+    inp = problem.make_inputs(size, seed=3)
+    ach, asx = _run_ref(inp)
+    for blk_ig in (16, 32, 64):
+        for blk_igp in (4, 16):
+            for blk_band in (4, 8, 16):
+                for tr in (False, True):
+                    cfg = pallas_gpp.BlockConfig(
+                        "t", blk_ig, blk_igp, blk_band, tr)
+                    a, x = pallas_gpp.gpp_pallas(inp, cfg, interpret=True)
+                    assert _rel(a, ach) < RTOL, cfg
+                    assert _rel(x, asx) < RTOL, cfg
+
+
+def test_ops_dispatch():
+    inp = problem.make_inputs(problem.TINY)
+    ach, asx = _run_ref(inp)
+    for v in ("v0", "v5"):
+        a, x = ops.gpp(inp, version=v)
+        assert _rel(a, ach) < RTOL
+    cfg = dataclasses.replace(pallas_gpp.V8, blk_ig=32, blk_igp=4, blk_band=4)
+    a, x = ops.gpp(inp, version="v8", block_config=cfg, interpret=True)
+    assert _rel(a, ach) < RTOL
+    with pytest.raises(ValueError):
+        ops.gpp(inp, version="v99")
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis): algebraic invariants of the contraction
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), alpha=st.floats(0.25, 4.0))
+def test_linearity_in_aqsn(seed, alpha):
+    """out is linear in aqsn: scaling aqsn scales both outputs by alpha."""
+    inp = problem.make_inputs(problem.TINY, seed=seed)
+    a0, x0 = jax.jit(variants.v5)(inp)
+    inp2 = dict(inp)
+    inp2["aqsn_re"] = inp["aqsn_re"] * alpha
+    inp2["aqsn_im"] = inp["aqsn_im"] * alpha
+    a1, x1 = jax.jit(variants.v5)(inp2)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a0) * alpha,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x0) * alpha,
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_ig_permutation_invariance(seed):
+    """The reduction over ig is permutation invariant (all ig-indexed
+    arrays permuted consistently)."""
+    rng = np.random.default_rng(seed)
+    inp = problem.make_inputs(problem.TINY, seed=seed)
+    perm = rng.permutation(problem.TINY.ncouls)
+    inp2 = dict(inp)
+    for k in ("wtilde_re", "wtilde_im", "eps_re", "eps_im",
+              "aqsn_re", "aqsn_im", "vcoul"):
+        inp2[k] = inp[k][perm]
+    a0, x0 = jax.jit(variants.v5)(inp)
+    a1, x1 = jax.jit(variants.v5)(inp2)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a0),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_band_additivity(seed):
+    """Splitting the band axis and summing the two halves' outputs equals
+    the full reduction (additivity of the band sum)."""
+    inp = problem.make_inputs(problem.TINY, seed=seed)
+    nb = problem.TINY.nbands
+    half = nb // 2
+
+    def slice_bands(lo, hi):
+        out = dict(inp)
+        out["aqsn_re"] = inp["aqsn_re"][:, lo:hi]
+        out["aqsn_im"] = inp["aqsn_im"][:, lo:hi]
+        out["aqsm_re"] = inp["aqsm_re"][:, lo:hi]
+        out["aqsm_im"] = inp["aqsm_im"][:, lo:hi]
+        out["wx"] = inp["wx"][:, lo:hi]
+        return out
+
+    a, x = jax.jit(variants.v5)(inp)
+    a1, x1 = jax.jit(variants.v5)(slice_bands(0, half))
+    a2, x2 = jax.jit(variants.v5)(slice_bands(half, nb))
+    np.testing.assert_allclose(np.asarray(a1 + a2), np.asarray(a),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(x1 + x2), np.asarray(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_f32_error_budget_vs_complex128():
+    """DESIGN.md's precision claim: planar f32 within 1e-4 relative of the
+    complex128 oracle at BENCH size."""
+    inp = problem.make_inputs(problem.BENCH, seed=0)
+    ach, asx = _run_ref(inp)
+    a, x = jax.jit(variants.v5)(inp)
+    assert _rel(a, ach) < 1e-4
+    assert _rel(x, asx) < 1e-4

@@ -1,0 +1,213 @@
+"""Numerical equivalence tests for the model internals: chunked-vs-exact
+attention, WKV6/Mamba chunked-vs-scan, prefill/decode consistency, MoE
+dispatch vs naive per-token routing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import get_config, reduce_config
+from repro.models import mamba as mamba_lib
+from repro.models import rwkv6 as rwkv_lib
+from repro.models.attention import chunked_causal_attention, decode_attention
+from repro.models.layers import PARAM_DTYPE
+from repro.models.moe import moe_ffn
+from repro.models.registry import build_model
+
+
+def _naive_causal(q, k, v, window=0):
+    b, s, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    qr = q.reshape(b, s, kvh, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) * hd ** -0.5
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(skv)[None, :]
+    mask = j <= i
+    if window:
+        mask &= j > i - window
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, -1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, hd)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000),
+       chunk=st.sampled_from([16, 32, 64]),
+       window=st.sampled_from([0, 24]))
+def test_chunked_attention_matches_naive(seed, chunk, window):
+    rng = jax.random.PRNGKey(seed)
+    ks = jax.random.split(rng, 3)
+    B, S, H, KvH, Hd = 2, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (B, S, H, Hd), PARAM_DTYPE)
+    k = jax.random.normal(ks[1], (B, S, KvH, Hd), PARAM_DTYPE)
+    v = jax.random.normal(ks[2], (B, S, KvH, Hd), PARAM_DTYPE)
+    ref = _naive_causal(q, k, v, window)
+    out = chunked_causal_attention(q, k, v, chunk=chunk, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=0.03, rtol=0.05)
+
+
+def test_chunked_attention_non_divisible_seq():
+    """whisper's 1500-frame encoder: chunk falls back to a divisor."""
+    rng = jax.random.PRNGKey(0)
+    B, S, H, Hd = 1, 150, 2, 8
+    q = jax.random.normal(rng, (B, S, H, Hd), PARAM_DTYPE)
+    out = chunked_causal_attention(q, q, q, chunk=64)
+    assert out.shape == (B, S, H, Hd)
+    assert np.all(np.isfinite(np.asarray(out, np.float32)))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), chunk=st.sampled_from([16, 32]))
+def test_wkv6_chunked_vs_scan(seed, chunk):
+    B, T, H, D = 2, 64, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    r, k, v = (jax.random.normal(ks[i], (B, T, H, D)) for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, D)) - 1))
+    u = 0.3 * jax.random.normal(ks[4], (H, D))
+    s0 = 0.1 * jax.random.normal(ks[5], (B, H, D, D))
+    y1, h1 = rwkv_lib.wkv6_scan(r, k, v, w, u, s0)
+    y2, h2 = rwkv_lib.wkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-3, rtol=1e-3)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_ssm_chunked_vs_scan(seed):
+    B, T, C, N = 2, 64, 4, 4
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    x = jax.random.normal(ks[0], (B, T, C))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, C)) - 2)
+    bm = jax.random.normal(ks[2], (B, T, N))
+    cm = jax.random.normal(ks[3], (B, T, N))
+    alog = jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32))[None].repeat(C, 0)
+    d = jax.random.normal(ks[5], (C,))
+    h0 = 0.1 * jax.random.normal(ks[6], (B, C, N))
+    y1, h1 = mamba_lib.ssm_scan(x, dt, bm, cm, alog, d, h0)
+    y2, h2 = mamba_lib.ssm_chunked(x, dt, bm, cm, alog, d, h0, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_decode_matches_prefill_dense():
+    """decode_step at position S must equal last-token logits of a prefill
+    over S+1 tokens (KV-cache correctness, dense family)."""
+    cfg = reduce_config(get_config("phi4-mini-3.8b"))
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init_params(rng)
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :S]})
+    pad = [(0, 0), (0, 0), (0, 8), (0, 0), (0, 0)]
+    cache = {**cache,
+             "k": jnp.pad(cache["k"], pad), "v": jnp.pad(cache["v"], pad)}
+    lg_d, _ = jax.jit(model.decode_step)(params, cache, toks[:, S:S + 1])
+    lg_f, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    err = float(jnp.max(jnp.abs(lg_d - lg_f)))
+    scale = float(jnp.max(jnp.abs(lg_f))) + 1e-6
+    assert err / scale < 0.05, (err, scale)
+
+
+def test_decode_matches_prefill_rwkv():
+    cfg = reduce_config(get_config("rwkv6-7b"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :S]})
+    lg_d, _ = jax.jit(model.decode_step)(params, cache, toks[:, S:S + 1])
+    lg_f, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    err = float(jnp.max(jnp.abs(lg_d - lg_f)))
+    scale = float(jnp.max(jnp.abs(lg_f))) + 1e-6
+    assert err / scale < 0.05, (err, scale)
+
+
+def test_moe_dispatch_matches_naive():
+    """Capacity-based gather/scatter dispatch == per-token expert loop
+    (capacity high enough that nothing drops)."""
+    T, D, E, K, F = 32, 16, 4, 2, 24
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (T, D), PARAM_DTYPE)
+    params = {
+        "router": 0.5 * jax.random.normal(ks[1], (D, E), PARAM_DTYPE),
+        "wi": jax.random.normal(ks[2], (E, D, F), PARAM_DTYPE) * 0.1,
+        "wg": jax.random.normal(ks[3], (E, D, F), PARAM_DTYPE) * 0.1,
+        "wo": jax.random.normal(ks[4], (E, F, D), PARAM_DTYPE) * 0.1,
+    }
+    out, aux = moe_ffn(x, params, n_experts=E, k=K, capacity_factor=8.0)
+
+    # naive reference
+    logits = np.asarray(x, np.float32) @ np.asarray(params["router"], np.float32)
+    probs = np.exp(logits - logits.max(-1, keepdims=True))
+    probs /= probs.sum(-1, keepdims=True)
+    ref = np.zeros((T, D), np.float32)
+    for t in range(T):
+        top = np.argsort(-probs[t])[:K]
+        wsum = probs[t, top].sum()
+        for e in top:
+            xe = np.asarray(x[t], np.float32)
+            h = xe @ np.asarray(params["wi"][e], np.float32)
+            g = xe @ np.asarray(params["wg"][e], np.float32)
+            act = h * (g / (1 + np.exp(-g)))
+            y = act @ np.asarray(params["wo"][e], np.float32)
+            ref[t] += probs[t, e] / wsum * y
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref,
+                               atol=0.05, rtol=0.1)
+    assert np.isfinite(float(aux))
+
+
+def test_decode_matches_prefill_whisper():
+    """encdec decode (self+cross cache) must continue the prefill exactly."""
+    cfg = reduce_config(get_config("whisper-small"))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    frames = 0.02 * jax.random.normal(jax.random.PRNGKey(2),
+                                      (B, cfg.enc_seq, cfg.d_model),
+                                      PARAM_DTYPE)
+    _, cache = jax.jit(model.prefill)(
+        params, {"frames": frames, "tokens": toks[:, :S]})
+    pad = [(0, 0), (0, 0), (0, 4), (0, 0), (0, 0)]
+    cache = {**cache,
+             "k": jnp.pad(cache["k"], pad), "v": jnp.pad(cache["v"], pad)}
+    lg_d, _ = jax.jit(model.decode_step)(params, cache, toks[:, S:S + 1])
+    lg_f, _ = jax.jit(model.prefill)(
+        params, {"frames": frames, "tokens": toks})
+    err = float(jnp.max(jnp.abs(lg_d - lg_f)))
+    scale = float(jnp.max(jnp.abs(lg_f))) + 1e-6
+    assert err / scale < 0.05, (err, scale)
+
+
+def test_hymba_ring_buffer_decode():
+    """hybrid decode past the attention window: ring buffer must roll, and
+    decode must keep matching a fresh prefill (window + SSM state carry)."""
+    cfg = reduce_config(get_config("hymba-1.5b"))   # window=64
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B = 1
+    S = cfg.attn_window + 16                         # cross the window
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    _, cache = jax.jit(model.prefill)(params, {"tokens": toks[:, :S]})
+    lg_d, cache2 = jax.jit(model.decode_step)(params, cache,
+                                              toks[:, S:S + 1])
+    lg_f, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    err = float(jnp.max(jnp.abs(lg_d - lg_f)))
+    scale = float(jnp.max(jnp.abs(lg_f))) + 1e-6
+    assert err / scale < 0.08, (err, scale)
+    assert int(cache2["pos"]) == S + 1

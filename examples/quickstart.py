@@ -21,8 +21,11 @@ def main():
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     trainer = Trainer(cfg, loop, mesh)
     out = trainer.run()
-    print(f"final loss: {out['final_loss']:.4f} "
-          f"(stragglers flagged: {out['stragglers']})")
+    if out["final_loss"] is None:
+        print(f"checkpoint already at step {out['start_step']}; skipping train")
+    else:
+        print(f"final loss: {out['final_loss']:.4f} "
+              f"(stragglers flagged: {out['stragglers']})")
 
     # restore the checkpoint and serve a couple of batched requests
     step, state = trainer.ckpt.restore()

@@ -59,7 +59,11 @@ def main():
         token_file=args.token_file)
     mesh = jax.make_mesh((args.data, args.model), ("data", "model"))
     out = Trainer(cfg, loop, mesh).run()
-    print(f"done. final loss {out['final_loss']:.4f} over {args.steps} steps")
+    if out["final_loss"] is None:
+        print(f"nothing to do: checkpoint already at step {out['start_step']}")
+    else:
+        print(f"done. final loss {out['final_loss']:.4f} "
+              f"over {len(out['losses'])} steps this run")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,4 @@
+"""repro: a production-scale jax_pallas system grown from the paper's
+single-kernel roofline study (8 Steps to 3.7 TFLOP/s, arXiv:2008.11326)."""
+
+from repro import _compat  # noqa: F401  (jax API shims; must import first)

@@ -1,0 +1,48 @@
+"""JAX version compatibility shims, applied on `import repro`.
+
+The codebase targets the current jax API (`jax.set_mesh`, `jax.shard_map`
+with `axis_names=` / `check_vma=`). On older toolchains (<= 0.4.x, the
+pinned container version) those names don't exist yet, so this module
+backfills them from their 0.4-era equivalents:
+
+  * jax.set_mesh(mesh) -> returns the Mesh itself; `with jax.set_mesh(m):`
+    then enters the legacy Mesh context manager (the ambient-mesh
+    mechanism of that era).
+  * jax.shard_map(...)  -> jax.experimental.shard_map.shard_map with
+    axis_names translated to its complement `auto` set and check_vma
+    mapped to check_rep.
+
+No-ops on toolchains that already provide the new names.
+"""
+
+from __future__ import annotations
+
+import jax
+
+if not hasattr(jax, "set_mesh"):
+    def _set_mesh(mesh):
+        return mesh
+
+    jax.set_mesh = _set_mesh
+
+
+if not hasattr(jax, "shard_map"):
+    from jax.experimental.shard_map import shard_map as _shard_map_04
+
+    def _shard_map(f=None, *, mesh, in_specs, out_specs,
+                   axis_names=None, check_vma=True, **kw):
+        # axis_names (partial-manual) is intentionally dropped: 0.4-era
+        # `auto` lowers to a PartitionId op XLA:CPU can't partition. Fully
+        # manual is safe for this codebase — in_specs give global views on
+        # the unnamed axes and bodies only psum/ppermute over named ones —
+        # it just forgoes compiler-automatic sharding of the auto dims.
+        del axis_names
+        kwargs = dict(kw, check_rep=bool(check_vma))
+
+        def bind(fn):
+            return _shard_map_04(fn, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kwargs)
+
+        return bind if f is None else bind(f)
+
+    jax.shard_map = _shard_map

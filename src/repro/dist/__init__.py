@@ -1,0 +1,14 @@
+"""Distribution layer: sharding assignment, fault tolerance, pipelining.
+
+Submodules:
+  * sharding — logical-axis -> mesh-axis assignment (ShardingPlan, spec_for,
+    params/cache/batch sharding trees). Divisibility-safe by construction:
+    a mesh axis is only ever assigned to a dim it divides, and never twice.
+  * fault    — heartbeat file, step watchdog (straggler EWMA), checkpoint
+    resume-or-init; the pieces the trainer's restart-idempotence contract
+    is built from.
+  * pipeline — microbatched pipeline parallelism over a mesh axis
+    (GPipe-style schedule under shard_map) + the bubble-fraction model.
+"""
+
+from repro.dist import fault, pipeline, sharding  # noqa: F401

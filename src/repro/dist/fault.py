@@ -1,0 +1,106 @@
+"""Fault-tolerance primitives for the training loop.
+
+Three small pieces, composed by train/trainer.py:
+
+  * HeartbeatFile — atomically-updated liveness file next to the
+    checkpoints. An external supervisor (or another host in the fleet)
+    reads it to decide whether this worker is alive; `stale()` is the
+    poll the supervisor would run.
+  * StepWatchdog — EWMA straggler detector over per-step wall-clock. On a
+    real fleet a sustained straggler triggers re-slicing; here it fires a
+    callback and records the event (asserted on by tests).
+  * resume_or_init — the restart-idempotence entry point: restore the
+    latest valid checkpoint onto the current mesh (elastic re-shard via
+    the shardings tree) or build fresh state. Combined with step-keyed
+    data order, kill + rerun resumes bit-identically
+    (tests/test_system.py::test_trainer_restart_idempotent).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, List, Optional, Tuple
+
+PyTree = Any
+
+
+class HeartbeatFile:
+    """Liveness beacon: {"step", "time"} JSON, atomically replaced."""
+
+    def __init__(self, directory: str, name: str = "HEARTBEAT"):
+        self.dir = directory
+        self.path = os.path.join(directory, name)
+        os.makedirs(directory, exist_ok=True)
+
+    def beat(self, step: int) -> None:
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"step": int(step), "time": time.time()}, fh)
+        os.replace(tmp, self.path)       # atomic: readers never see a torn beat
+
+    def read(self) -> Optional[dict]:
+        try:
+            with open(self.path) as fh:
+                return json.load(fh)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def age_s(self) -> Optional[float]:
+        b = self.read()
+        return None if b is None else max(0.0, time.time() - b["time"])
+
+    def stale(self, timeout_s: float = 300.0) -> bool:
+        """True when the worker should be presumed dead (no beat within
+        timeout, or no beat ever written)."""
+        age = self.age_s()
+        return age is None or age > timeout_s
+
+
+class StepWatchdog:
+    """Straggler detection on step wall-clock: alarm when a step exceeds
+    `factor` x the EWMA of previous steps. The first `warmup` observations
+    only train the EWMA (they include compile time)."""
+
+    def __init__(self, on_straggler: Optional[Callable] = None, *,
+                 factor: float = 3.0, warmup: int = 3, alpha: float = 0.2):
+        self.on_straggler = on_straggler
+        self.factor = factor
+        self.warmup = warmup
+        self.alpha = alpha
+        self.ewma: Optional[float] = None
+        self.count = 0
+        self.stragglers: List[Tuple[int, float, float]] = []
+
+    def observe(self, step: int, dt: float) -> bool:
+        """Record one step time; returns True if it was flagged."""
+        flagged = False
+        if (self.count >= self.warmup and self.ewma is not None
+                and dt > self.factor * self.ewma):
+            flagged = True
+            self.stragglers.append((step, dt, self.ewma))
+            if self.on_straggler is not None:
+                self.on_straggler(step, dt, self.ewma)
+        if self.ewma is None:
+            self.ewma = dt
+        else:
+            # fold flagged steps in clamped at the alarm threshold: one
+            # outlier can't poison the baseline, but a sustained slowdown
+            # re-baselines instead of alarming forever
+            d = min(dt, self.factor * self.ewma)
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * d
+        self.count += 1
+        return flagged
+
+
+def resume_or_init(ckpt, init_fn: Callable[[], PyTree], *,
+                   shardings: Optional[PyTree] = None
+                   ) -> Tuple[int, PyTree]:
+    """(start_step, state): restore the latest checkpoint re-sharded onto
+    the current mesh, else (0, init_fn()). `ckpt` is a
+    repro.ckpt.checkpoint.CheckpointManager."""
+    step = ckpt.latest_step()
+    if step is None:
+        return 0, init_fn()
+    return ckpt.restore(step, shardings=shardings)

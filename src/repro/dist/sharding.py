@@ -1,0 +1,218 @@
+"""Logical-axis -> mesh-axis assignment (the sharding engine).
+
+Every param/cache/batch leaf carries *logical axes* (recorded by
+ParamBuilder / cache_logical_axes, e.g. ("layers", "d_model", "d_ff")).
+`spec_for` maps those names onto mesh axes under a ShardingPlan, enforcing
+two invariants the rest of the stack relies on (and tests/test_dist.py
+property-checks):
+
+  * divisibility — a mesh axis (or axis group) is only assigned to a dim
+    whose size it divides; a non-divisible candidate REPLICATES instead
+    (e.g. qwen2-1.5b's 12 heads / kv=2 on a 16-way model axis);
+  * no reuse — a mesh axis appears at most once per spec.
+
+Assignment order (first claim wins):
+  1. TP: the `model` axis goes to the highest-priority tensor dim — with
+     `kv_seq_shard`, the KV-cache seq dim steals it (distributed
+     flash-decode) ahead of the usual last-to-first scan over
+     d_ff / heads / kv_heads / vocab dims;
+  2. EP: with `ep_data`, MoE expert dims take the dp axes (weights stay
+     resident, tokens move — see train/step.make_plan);
+  3. DP: batch dims (activations only) take the longest prefix of the dp
+     axes whose product divides the batch;
+  4. FSDP: params additionally scatter the dp axes onto the LARGEST dim
+     that still divides (ZeRO-3-style weight sharding).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+LogicalAxes = Tuple[Optional[str], ...]
+PyTree = Any
+
+# Tensor dims eligible for the model (TP) axis. The scan runs over dims
+# last-to-first, so the output-feature dim of a projection wins over its
+# input dim (column-parallel wq/wi; row-parallel wo claims via d_ff/heads
+# being its dim 1 -> the contraction stays sharded, matching matmul_rp).
+_TP_NAMES = ("d_ff", "heads", "kv_heads", "vocab")
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    """How one (model x mesh x cell-kind) combination maps onto the mesh.
+
+    dp_axes: data-parallel mesh axes in outer-to-inner order, e.g.
+        ("pod", "data") on the 2x16x16 multi-pod mesh.
+    fsdp: scatter params/optimizer over the dp axes (train, >8B dense).
+    kv_seq_shard: decode-time KV seq dim takes the model axis
+        (distributed flash-decode).
+    ep_data: MoE expert dims shard over the dp axes (EP).
+    """
+    mesh: Any
+    dp_axes: Tuple[str, ...] = ()
+    fsdp: bool = False
+    kv_seq_shard: bool = False
+    ep_data: bool = False
+
+    @property
+    def tp_axis(self) -> Optional[str]:
+        return "model" if "model" in self.mesh.shape else None
+
+    def axis_size(self, name: str) -> int:
+        return int(self.mesh.shape[name])
+
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp_axes:
+            n *= self.axis_size(a)
+        return n
+
+
+def spec_for(plan: ShardingPlan, axes: Sequence[Optional[str]],
+             shape: Sequence[int], *, is_param: bool = True) -> P:
+    """PartitionSpec for one leaf with logical `axes` and concrete `shape`.
+
+    is_param=True leaves are weights (TP + EP + FSDP apply); False leaves
+    are activations / caches (TP + DP apply). Every rule falls back to
+    replication when divisibility fails.
+    """
+    axes = tuple(axes)
+    assert len(axes) == len(shape), (axes, shape)
+    n = len(axes)
+    assigned: list = [[] for _ in range(n)]
+    used: set = set()
+
+    def divisor(i: int) -> int:
+        d = 1
+        for a in assigned[i]:
+            d *= plan.axis_size(a)
+        return d
+
+    def fits(i: int, names: Tuple[str, ...]) -> bool:
+        if any(a in used for a in names):
+            return False
+        d = divisor(i)
+        for a in names:
+            d *= plan.axis_size(a)
+        return shape[i] % d == 0
+
+    def take(i: int, names: Tuple[str, ...]) -> None:
+        assigned[i].extend(names)
+        used.update(names)
+
+    def longest_dp_prefix(i: int) -> Tuple[str, ...]:
+        for k in range(len(plan.dp_axes), 0, -1):
+            names = tuple(plan.dp_axes[:k])
+            if fits(i, names):
+                return names
+        return ()
+
+    # 1. TP — the model axis goes to exactly one tensor dim.
+    tp = plan.tp_axis
+    if tp is not None:
+        candidates = []
+        if not is_param and plan.kv_seq_shard:
+            candidates += [i for i in reversed(range(n))
+                           if axes[i] == "kv_seq"]
+        candidates += [i for i in reversed(range(n))
+                       if axes[i] in _TP_NAMES]
+        for i in candidates:
+            if fits(i, (tp,)):
+                take(i, (tp,))
+                break
+
+    # 2. EP — expert dims over the dp axes (params only).
+    if is_param and plan.ep_data:
+        for i in range(n):
+            if axes[i] == "experts":
+                names = longest_dp_prefix(i)
+                if names:
+                    take(i, names)
+                break
+
+    # 3. DP — batch dims over the dp axes (activations only).
+    if not is_param:
+        for i in range(n):
+            if axes[i] == "batch":
+                names = longest_dp_prefix(i)
+                if names:
+                    take(i, names)
+                break
+
+    # 4. FSDP — params scatter the dp axes onto the largest dividing dim.
+    # Draw from the still-unused dp axes (EP may have claimed a prefix) so
+    # ep_data+fsdp plans don't silently lose the ZeRO-3 scatter.
+    if is_param and plan.fsdp and plan.dp_axes:
+        avail = tuple(a for a in plan.dp_axes if a not in used)
+        for k in range(len(avail), 0, -1):
+            names = tuple(avail[:k])
+            eligible = [i for i in range(n) if fits(i, names)]
+            if eligible:
+                take(max(eligible, key=lambda i: shape[i]), names)
+                break
+
+    entries = []
+    for names in assigned:
+        if not names:
+            entries.append(None)
+        elif len(names) == 1:
+            entries.append(names[0])
+        else:
+            entries.append(tuple(names))
+    return P(*entries)
+
+
+# ---------------------------------------------------------------------------
+# tree builders
+# ---------------------------------------------------------------------------
+
+def params_shardings(plan: ShardingPlan,
+                     param_axes: Dict[str, LogicalAxes],
+                     ab_params: PyTree) -> PyTree:
+    """NamedSharding tree for a params tree; `param_axes` maps "a/b/c"
+    nesting paths to logical axes (ParamBuilder.axes). Leaves without a
+    recorded path replicate."""
+
+    def walk(node, path=""):
+        if isinstance(node, dict):
+            return {k: walk(v, f"{path}/{k}" if path else k)
+                    for k, v in node.items()}
+        axes = param_axes.get(path) or (None,) * len(node.shape)
+        return NamedSharding(plan.mesh,
+                             spec_for(plan, axes, node.shape, is_param=True))
+
+    return walk(ab_params)
+
+
+def cache_shardings(plan: ShardingPlan, cache_axes: PyTree,
+                    abstract_cache: PyTree) -> PyTree:
+    """NamedSharding tree for a decode cache; `cache_axes` mirrors the cache
+    structure with logical-axes tuples (registry.cache_logical_axes)."""
+
+    def walk(ax_node, ab_node):
+        if isinstance(ab_node, dict):
+            return {k: walk(ax_node[k], v) for k, v in ab_node.items()}
+        axes = tuple(ax_node) if ax_node else (None,) * len(ab_node.shape)
+        return NamedSharding(
+            plan.mesh, spec_for(plan, axes, ab_node.shape, is_param=False))
+
+    return walk(cache_axes, abstract_cache)
+
+
+def batch_shardings(plan: ShardingPlan, batch: PyTree) -> PyTree:
+    """NamedSharding tree for an input batch: dim 0 is the global batch
+    (sharded over the dp axes when divisible), the rest replicate."""
+
+    def leaf(x):
+        if not x.shape:                       # scalar leaf -> replicated
+            return NamedSharding(plan.mesh, P())
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        return NamedSharding(
+            plan.mesh, spec_for(plan, axes, x.shape, is_param=False))
+
+    return jax.tree.map(leaf, batch)

@@ -21,7 +21,6 @@ from repro.configs.base import ModelConfig
 from repro.data.pipeline import (DataConfig, PrefetchIterator, TokenSource,
                                  make_stub_frontend_batch)
 from repro.dist.fault import HeartbeatFile, StepWatchdog, resume_or_init
-from repro.dist.sharding import ShardingPlan, batch_shardings
 from repro.models.registry import build_model
 from repro.train import step as step_lib
 
@@ -125,6 +124,7 @@ class Trainer:
             self.ckpt.barrier()
         return {"final_loss": losses[-1] if losses else None,
                 "losses": losses,
+                "start_step": start_step,
                 "stragglers": self.watchdog.stragglers,
                 "metrics": {k: float(np.asarray(v))
                             for k, v in metrics.items()}}

@@ -1,0 +1,68 @@
+"""Property-test shim: `from _prop import given, settings, st`.
+
+With hypothesis installed (requirements-dev.txt) this re-exports the real
+thing. Without it, a deterministic fallback runs each property over a
+small seeded sample of examples — weaker shrinking/coverage, but tier-1
+collection never fails on a missing dev dependency.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic sampled-example fallback
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _FALLBACK_EXAMPLES = 8      # cap per property; keeps tier-1 cheap
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def example(self, rng):
+            return self._sample(rng)
+
+    class st:  # noqa: N801 — mimics `strategies as st`
+        @staticmethod
+        def integers(min_value=0, max_value=1 << 30):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+    def given(**strategies):
+        def deco(fn):
+            def wrapper():
+                # @settings may sit above @given (attr lands on wrapper) or
+                # below it (attr lands on fn) — hypothesis allows both
+                limit = getattr(wrapper, "_max_examples",
+                                getattr(fn, "_max_examples",
+                                        _FALLBACK_EXAMPLES))
+                n = min(limit, _FALLBACK_EXAMPLES)
+                rng = random.Random(0)
+                for _ in range(n):
+                    fn(**{k: s.example(rng) for k, s in strategies.items()})
+            # plain def (no functools.wraps): pytest must see a zero-arg
+            # signature, not the strategy params as fixture requests
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def settings(max_examples=_FALLBACK_EXAMPLES, **_):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

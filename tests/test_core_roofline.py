@@ -2,7 +2,7 @@
 including the paper's own FMA-ratio example as the customized-ceiling check."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import hlo_analysis as H
 from repro.core import roofline

@@ -2,15 +2,18 @@
 XLA_FLAGS forcing 8 host devices — the main pytest process keeps the single
 real CPU device (per the dry-run isolation contract)."""
 
+import os
 import subprocess
 import sys
 import textwrap
 import types
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.dist.sharding import ShardingPlan, spec_for
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def _fake_mesh(**axes):
@@ -92,14 +95,90 @@ def test_spec_never_violates_divisibility(dm, dff, heads, fsdp):
         assert shape[i] % div == 0, (spec, shape)
 
 
+# --------------------------------------------------- fault-tolerance pieces
+
+def test_heartbeat_roundtrip(tmp_path):
+    from repro.dist.fault import HeartbeatFile
+    hb = HeartbeatFile(str(tmp_path))
+    assert hb.read() is None and hb.stale(1e9)
+    hb.beat(7)
+    b = hb.read()
+    assert b["step"] == 7
+    assert not hb.stale(60.0)
+    assert hb.age_s() < 60.0
+
+
+def test_watchdog_flags_straggler_after_warmup():
+    from repro.dist.fault import StepWatchdog
+    hits = []
+    wd = StepWatchdog(on_straggler=lambda s, dt, ew: hits.append(s),
+                      factor=3.0, warmup=3)
+    assert not wd.observe(0, 30.0)          # compile step trains the EWMA
+    for i in range(1, 6):
+        assert not wd.observe(i, 1.0)
+    assert wd.observe(6, 50.0)              # 50x the settled baseline
+    assert hits == [6] and wd.stragglers[0][0] == 6
+    assert not wd.observe(7, 1.0)           # one outlier didn't poison EWMA
+    # a sustained slowdown (every step 40s vs ~12s EWMA) alarms at first,
+    # then re-baselines instead of alarming forever
+    flags = [wd.observe(8 + i, 40.0) for i in range(40)]
+    assert flags[0], "sustained slowdown never flagged at all"
+    assert not flags[-1], "watchdog never re-baselined"
+
+
+def test_resume_or_init_fresh_and_resumed(tmp_path):
+    from repro.ckpt.checkpoint import CheckpointManager
+    from repro.dist.fault import resume_or_init
+    import numpy as np
+    mgr = CheckpointManager(str(tmp_path))
+    step, state = resume_or_init(mgr, lambda: {"w": np.zeros(3)})
+    assert step == 0 and state["w"].sum() == 0
+    mgr.save(5, {"w": np.ones(3)}, blocking=True)
+    step, state = resume_or_init(mgr, lambda: {"w": np.zeros(3)})
+    assert step == 5 and state["w"].sum() == 3
+
+
+def test_bubble_fraction_model():
+    from repro.dist.pipeline import bubble_fraction
+    assert bubble_fraction(1, 4) == 0.0              # no pipeline, no bubble
+    assert abs(bubble_fraction(4, 4) - 3 / 7) < 1e-9
+    # more microbatches amortize the fixed fill/drain cost
+    assert bubble_fraction(4, 32) < bubble_fraction(4, 8)
+
+
+def test_batch_and_params_sharding_trees():
+    """Tree builders produce NamedSharding leaves (real 1-device mesh; the
+    axis-assignment rules themselves are covered by the fakes above)."""
+    import jax
+    from repro.dist.sharding import (ShardingPlan, batch_shardings,
+                                     params_shardings)
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    p = ShardingPlan(mesh=mesh, dp_axes=("pod", "data"))
+    bs = batch_shardings(p, {"tokens": types.SimpleNamespace(shape=(256, 4096)),
+                             "labels": types.SimpleNamespace(shape=(256, 4096)),
+                             "cur_len": types.SimpleNamespace(shape=())})
+    assert set(bs) == {"tokens", "labels", "cur_len"}
+    assert tuple(bs["tokens"].spec)[0] == ("pod", "data")
+    assert tuple(bs["cur_len"].spec) in ((), (None,))  # scalar replicates
+    ps = params_shardings(
+        p, {"ffn/wi": ("layers", "d_model", "d_ff")},
+        {"ffn": {"wi": types.SimpleNamespace(shape=(48, 5120, 27648))},
+         "norm": types.SimpleNamespace(shape=(48, 5120))})
+    assert tuple(ps["ffn"]["wi"].spec) == (None, None, "model")
+    assert tuple(ps["norm"].spec) in ((), (None,), (None, None))
+
+
 # ------------------------------------------------- multi-device (subprocess)
 
 def _run_sub(code: str):
-    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
-           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    src = os.path.join(REPO_ROOT, "src")
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=(src + os.pathsep + os.environ["PYTHONPATH"]
+                           if os.environ.get("PYTHONPATH") else src))
     r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=560,
-                       cwd=".", env=env)
+                       cwd=REPO_ROOT, env=env)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     return r.stdout
 

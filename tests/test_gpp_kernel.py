@@ -7,7 +7,7 @@ import dataclasses
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.kernels.gpp import ops, pallas_gpp, problem, ref, variants
 

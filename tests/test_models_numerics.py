@@ -5,7 +5,7 @@ dispatch vs naive per-token routing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.configs.base import get_config, reduce_config
 from repro.models import mamba as mamba_lib

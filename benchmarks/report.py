@@ -1,19 +1,209 @@
-"""Generate EXPERIMENTS.md §Dry-run and §Roofline tables from the artifacts
-in runs/dryrun/*.json + the GPP journey, splicing them into the hand-written
-narrative (EXPERIMENTS.template.md is NOT used — the script owns the whole
-file; §Perf iteration logs are embedded below as code since they narrate
-measured befores/afters)."""
+"""Benchmark reporting: BENCH_*.json artifacts, the regression-compare gate,
+and the legacy EXPERIMENTS.md generator.
+
+## BENCH_*.json artifact schema ("repro-bench/v1")
+
+    {
+      "schema": "repro-bench/v1",
+      "created_unix": 1753...,          # seconds since epoch
+      "backend": "cpu",                 # jax.default_backend()
+      "tables": ["gpp_journey", ...],   # which tables produced the rows
+      "rows": [
+        {"name": "gpp_si214_v8",        # CSV row name (stable join key)
+         "us_per_call": 1234.5,         # measured wall clock, or null
+         "derived": "modeled_tflops=4.077;step_s=0.3585",   # raw CSV field
+         "metrics": {"modeled_tflops": 4.077, "step_s": 0.3585}},
+        ...
+      ]
+    }
+
+`metrics` is `derived` parsed into the numeric key=value pairs (non-numeric
+values like `dominant=compute` are dropped). Artifacts are written by
+`python -m benchmarks.run --json PATH` and live under runs/bench/ locally
+(BENCH_<pr>.json by convention) or as CI artifacts.
+
+## Compare mode (the CI regression gate)
+
+    python -m benchmarks.report --compare OLD.json NEW.json [--threshold 0.1]
+
+Joins rows by name and diffs every shared numeric metric. A metric is a
+regression when it moves >threshold (default 10%) in its bad direction
+(lower-is-better for times/bytes, higher-is-better for throughput — see
+LOWER_BETTER/HIGHER_BETTER). Exits 1 if any regression is found (0 with
+--warn-only). Wall-clock `us_per_call` is machine-dependent noise across CI
+hosts, so it is excluded unless --include-wallclock is passed; the modeled
+metrics are deterministic and gate cleanly.
+
+## Legacy mode (no arguments)
+
+Regenerates EXPERIMENTS.md §Dry-run/§Roofline from runs/dryrun/*.json +
+the GPP journey (requires EXPERIMENTS.header.md).
+"""
 
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
 
 HERE = os.path.dirname(__file__)
 ROOT = os.path.join(HERE, "..")
 RUNS = os.path.join(ROOT, "runs", "dryrun")
 
+SCHEMA = "repro-bench/v1"
+
+# metric-name direction table for the regression gate. Substring match on
+# the metric key; anything matching neither list is informational only.
+LOWER_BETTER = ("us_per_call", "step_s", "modeled_s", "cpu_ms", "compute_s",
+                "memory_s", "measured_us", "gib", "vmem_mib", "bytes")
+HIGHER_BETTER = ("tflops", "pct_vpu_peak", "roofline", "speedup")
+# wall-clock metrics are machine-dependent noise across CI hosts: excluded
+# from the gate unless --include-wallclock
+WALLCLOCK = ("us_per_call", "measured_us", "cpu_ms")
+
+
+# ---------------------------------------------------------------------------
+# artifact write/read
+# ---------------------------------------------------------------------------
+
+def parse_derived(derived: str) -> Dict[str, float]:
+    """`a=1;b=2.5;c=compute` -> {'a': 1.0, 'b': 2.5} (numeric pairs only)."""
+    out = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        try:
+            out[k.strip()] = float(v)
+        except ValueError:
+            continue
+    return out
+
+
+def make_artifact(rows: List[Dict], *, tables: Optional[List[str]] = None
+                  ) -> Dict:
+    try:
+        import jax
+        backend = jax.default_backend()
+    except Exception:
+        backend = "unknown"
+    return {
+        "schema": SCHEMA,
+        "created_unix": int(time.time()),
+        "backend": backend,
+        "tables": list(tables or []),
+        "rows": [{"name": r["name"],
+                  "us_per_call": r.get("us_per_call"),
+                  "derived": r.get("derived", ""),
+                  "metrics": parse_derived(r.get("derived", ""))}
+                 for r in rows],
+    }
+
+
+def write_artifact(rows: List[Dict], path: str, *,
+                   tables: Optional[List[str]] = None) -> Dict:
+    art = make_artifact(rows, tables=tables)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(art, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+    return art
+
+
+def load_artifact(path: str) -> Dict:
+    with open(path) as fh:
+        art = json.load(fh)
+    if art.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: unknown schema {art.get('schema')!r} "
+                         f"(expected {SCHEMA})")
+    return art
+
+
+# ---------------------------------------------------------------------------
+# compare (regression gate)
+# ---------------------------------------------------------------------------
+
+def _direction(metric: str) -> Optional[int]:
+    """-1: lower is better, +1: higher is better, None: informational."""
+    for s in HIGHER_BETTER:
+        if s in metric:
+            return +1
+    for s in LOWER_BETTER:
+        if s in metric:
+            return -1
+    return None
+
+
+def compare(old: Dict, new: Dict, *, threshold: float = 0.10,
+            include_wallclock: bool = False
+            ) -> Tuple[List[str], List[str], List[str]]:
+    """Diff two artifacts. Returns (regressions, improvements, notes) as
+    human-readable lines; non-empty regressions is the gate failure."""
+    old_rows = {r["name"]: r for r in old["rows"]}
+    new_rows = {r["name"]: r for r in new["rows"]}
+    regressions, improvements, notes = [], [], []
+
+    for name in sorted(set(old_rows) - set(new_rows)):
+        notes.append(f"row removed: {name}")
+    for name in sorted(set(new_rows) - set(old_rows)):
+        notes.append(f"row added: {name}")
+
+    for name in sorted(set(old_rows) & set(new_rows)):
+        o, n = old_rows[name], new_rows[name]
+        om = dict(o.get("metrics", {}))
+        nm = dict(n.get("metrics", {}))
+        if include_wallclock:
+            if o.get("us_per_call") is not None:
+                om["us_per_call"] = o["us_per_call"]
+            if n.get("us_per_call") is not None:
+                nm["us_per_call"] = n["us_per_call"]
+        for metric in sorted(set(om) & set(nm)):
+            if not include_wallclock and any(w in metric for w in WALLCLOCK):
+                continue
+            direction = _direction(metric)
+            ov, nv = om[metric], nm[metric]
+            if direction is None or ov == 0:
+                continue
+            change = (nv - ov) / abs(ov)          # >0 means metric went up
+            bad = change if direction == -1 else -change   # >0 means worse
+            line = (f"{name}.{metric}: {ov:.6g} -> {nv:.6g} "
+                    f"({change:+.1%})")
+            if bad > threshold:
+                regressions.append(line)
+            elif -bad > threshold:
+                improvements.append(line)
+    return regressions, improvements, notes
+
+
+def run_compare(old_path: str, new_path: str, *, threshold: float = 0.10,
+                include_wallclock: bool = False, warn_only: bool = False
+                ) -> int:
+    old, new = load_artifact(old_path), load_artifact(new_path)
+    regressions, improvements, notes = compare(
+        old, new, threshold=threshold, include_wallclock=include_wallclock)
+    for line in notes:
+        print(f"note: {line}")
+    for line in improvements:
+        print(f"improved: {line}")
+    for line in regressions:
+        print(f"REGRESSION: {line}")
+    print(f"compare: {len(regressions)} regression(s), "
+          f"{len(improvements)} improvement(s) "
+          f"(threshold {threshold:.0%}, {old_path} -> {new_path})")
+    if regressions and not warn_only:
+        return 1
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# legacy EXPERIMENTS.md generator
+# ---------------------------------------------------------------------------
 
 def load(tag):
     rows = {}
@@ -68,17 +258,20 @@ def journey_section():
         rows = run_journey(size, measure_cpu=(size == "si214"),
                            verbose=False)
         out.append(format_journey(rows, size))
-        v0, v8 = rows[0], rows[-1]
+        v0, v8 = rows[0], next(r for r in rows if r.version == "v8")
+        vbest = rows[-1]
         out.append(
             f"\nmodeled v8/v0 speedup **{v0.report.modeled_step_s/v8.report.modeled_step_s:.2f}×** "
             f"(paper wall-clock: {'2.36×' if size=='si214' else '3.27×'}); "
             f"v8 = {v8.modeled_tflops:.2f} TF/s = "
             f"{v8.modeled_tflops*1e12/FLOP_PEAK:.0%} of the VPU peak "
-            f"(paper: 3.71 TF/s = 55% of FP64 peak).\n")
+            f"(paper: 3.71 TF/s = 55% of FP64 peak). Beyond-paper "
+            f"v10 = {vbest.modeled_tflops:.2f} TF/s "
+            f"({v0.report.modeled_step_s/vbest.report.modeled_step_s:.2f}× v0).\n")
     return "\n".join(out)
 
 
-def main():
+def write_experiments():
     single = load("single")
     multi = load("multi")
     sections = {
@@ -87,14 +280,40 @@ def main():
         "MULTI_TABLE": cell_table(multi),
         "JOURNEY": journey_section(),
     }
-    tpl = open(os.path.join(ROOT, "EXPERIMENTS.header.md")).read()
+    header = os.path.join(ROOT, "EXPERIMENTS.header.md")
+    if not os.path.exists(header):
+        print("EXPERIMENTS.header.md missing — nothing to splice into "
+              "(use --compare for the artifact gate)", file=sys.stderr)
+        return 2
+    tpl = open(header).read()
     for k, v in sections.items():
         tpl = tpl.replace("{{" + k + "}}", v)
     with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as fh:
         fh.write(tpl)
     print("EXPERIMENTS.md written "
           f"({len(single)} single + {len(multi)} multi cells)")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare", nargs=2, metavar=("OLD", "NEW"),
+                    help="diff two BENCH_*.json artifacts; exit 1 on a "
+                         ">threshold regression")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="regression threshold as a fraction (default 0.10)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (CI soft-introduce)")
+    ap.add_argument("--include-wallclock", action="store_true",
+                    help="also gate us_per_call (noisy across machines)")
+    args = ap.parse_args(argv)
+    if args.compare:
+        return run_compare(args.compare[0], args.compare[1],
+                           threshold=args.threshold,
+                           include_wallclock=args.include_wallclock,
+                           warn_only=args.warn_only)
+    return write_experiments()
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,7 +1,9 @@
 """The GPP optimization journey — reproduces the paper's Table I + roofline
-trajectory (Figs. 1/3/5/6) on the TPU-v5e machine model.
+trajectory (Figs. 1/3/5/6) on the TPU-v5e machine model, then extends it
+beyond the paper: v9 (fused VMEM scratch accumulation + parallel grid
+semantics) and v10 (v9 under the repro.tune autotuner's per-size pick).
 
-Per version v0..v8 this harness reports:
+Per version v0..v10 this harness reports:
   * correctness vs the complex128 oracle (TINY problem, CPU);
   * measured CPU wall-clock at BENCH size (secondary signal — the container
     is CPU-only; the pure-JAX variants really execute, Pallas in interpret);
@@ -13,81 +15,30 @@ Per version v0..v8 this harness reports:
     %-of-theoretical (VPU peak) and %-of-customized (pass-mix attainable,
     the FMA-ratio-ceiling analogue).
 
-Model constants (documented assumptions):
-  VPU issue rate 4 ops/lane-cycle x 1024 lanes x 0.94 GHz = 3.85e12 pass/s
-  (an all-FMA stream then sustains 7.7e12 FLOP/s = hw.TPU_V5E.vpu_flops);
-  grid-step issue overhead 0.3 us (DMA issue + sequencing per grid instance
-  when the block is too small to hide it);
-  lane-granularity DMA inflation: an array whose minor (lane) dim tiles
-  below 128 pays 128/dim in traffic (v6's aqsm layout).
+The machine model and instruction census live in core.vpu_model (shared
+with the tuner); the names below are re-exported for compatibility.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
-from repro.core import roofline
+from repro.core import roofline, vpu_model
 from repro.core.hw import TPU_V5E
-from repro.kernels.gpp import pallas_gpp, problem, ref, variants
+# re-exports: the public model-constant surface predates vpu_model
+from repro.core.vpu_model import (  # noqa: F401
+    FLOP_PEAK, FLOPS, GRID_OVERHEAD_FUSED_S, GRID_OVERHEAD_S, OP_MIX, PASSES,
+    PASS_RATE, SCAN_OVERHEAD_S, OpMix)
+from repro.kernels.gpp import ops, pallas_gpp, problem, ref, variants
+from repro.tune import tuner
 
-PASS_RATE = 4 * 1024 * 0.94e9          # VPU passes/s (4 ALUs x 8x128 lanes)
-FLOP_PEAK = TPU_V5E.vpu_flops          # all-FMA ceiling (2 flops/pass)
-GRID_OVERHEAD_S = 0.3e-6               # per grid instance
-SCAN_OVERHEAD_S = 1.0e-6               # per XLA scan step (loop latency)
-# passes per op class: fma pairs mul+add in one pass (2 flops); divides and
-# sqrt are multi-pass NR sequences on the VPU (the paper's long-latency ops).
-PASSES = {"basic": 1.0, "fma": 1.0, "rcp": 4.0, "sqrt": 8.0, "div": 8.0}
-FLOPS = {"basic": 1.0, "fma": 2.0, "rcp": 1.0, "sqrt": 1.0, "div": 1.0}
-
-
-@dataclasses.dataclass(frozen=True)
-class OpMix:
-    """Instruction census per inner (ig,igp,band,iw) iteration."""
-    basic: float
-    fma: float = 0.0
-    rcp: float = 0.0
-    sqrt: float = 0.0
-    div: float = 0.0
-
-    def _dot(self, table) -> float:
-        return (self.basic * table["basic"] + self.fma * table["fma"]
-                + self.rcp * table["rcp"] + self.sqrt * table["sqrt"]
-                + self.div * table["div"])
-
-    @property
-    def passes(self) -> float:
-        return self._dot(PASSES)
-
-    @property
-    def flops(self) -> float:
-        return self._dot(FLOPS)
-
-
-# censuses audited against the planar-f32 arithmetic in variants.py /
-# pallas_gpp.py (complex mul = 2 fma + 2 mul; |z|^2 = 1 fma + 1 mul; the
-# select/compare chain is pass-only "basic" work):
-OP_MIX = {
-    # divides + abs() + 3-way branch + per-iw mat recompute
-    "v0": OpMix(basic=58, fma=14, sqrt=2, div=4),
-    # divides -> reciprocals (3 rcp/iter: wdiffr, cden1, cden2)
-    "v1": OpMix(basic=60, fma=14, rcp=3, sqrt=2),
-    # 3-way -> zero-init + masked selects (2 fewer selects)
-    "v2": OpMix(basic=58, fma=14, rcp=3, sqrt=2),
-    # abs()/sqrt -> squared-magnitude compares
-    "v3": OpMix(basic=58, fma=14, rcp=3),
-    # band-serial: same mix, memory-side change
-    "v4": OpMix(basic=58, fma=14, rcp=3),
-    # mat hoisted across iw: one cmul + 2 vcoul muls amortized over nw
-    "v5": OpMix(basic=54, fma=14, rcp=3),
-    "v6": OpMix(basic=54, fma=14, rcp=3),
-    "v7": OpMix(basic=54, fma=14, rcp=3),
-    "v8": OpMix(basic=54, fma=14, rcp=3),
-}
+VERSIONS = ("v0", "v1", "v2", "v3", "v4", "v5", "v6", "v7", "v8", "v9",
+            "v10")
 
 
 def _igp_stream_bytes(s: problem.GppSize) -> float:
@@ -106,14 +57,14 @@ def _ideal_cache_bytes(s: problem.GppSize) -> float:
     return s.min_hbm_bytes()
 
 
-def _pallas_bytes(s: problem.GppSize, cfg: pallas_gpp.BlockConfig) -> float:
-    b = pallas_gpp.hbm_traffic_model(s, cfg)
-    if not cfg.aqsm_transposed and cfg.blk_band < 128:
-        # v6: aqsm lane dim = band < 128 -> DMA granularity inflation
-        n_ig = s.ncouls // cfg.blk_ig
-        base = n_ig * 2 * 4 * s.ngpown * s.nbands
-        b += base * (128.0 / cfg.blk_band - 1.0)
-    return float(b)
+def _version_config(version: str,
+                    size: problem.GppSize) -> pallas_gpp.BlockConfig:
+    """The BlockConfig a journey version runs under at `size`: static for
+    v6–v9, the tuner's model-ranked pick for v10 (measurement is the ops
+    dispatch path's job — the journey models sizes far beyond CPU timing)."""
+    if version == "v10":
+        return tuner.rank(size, version="v10")[0][0]
+    return pallas_gpp.CONFIGS[version]
 
 
 @dataclasses.dataclass
@@ -136,6 +87,7 @@ def _model_report(version: str, size: problem.GppSize) -> roofline.RooflineRepor
     flops = iters * mix.flops
     compute_s = iters * mix.passes / PASS_RATE
     overhead_s = 0.0
+    extra = {}
 
     if version in ("v0", "v1", "v2", "v3"):
         hbm = _igp_stream_bytes(size)
@@ -144,14 +96,28 @@ def _model_report(version: str, size: problem.GppSize) -> roofline.RooflineRepor
         hbm = _ideal_cache_bytes(size)
         overhead_s = size.nbands * SCAN_OVERHEAD_S
     else:
-        cfg = pallas_gpp.CONFIGS[version]
-        hbm = _pallas_bytes(size, cfg)
-        n_inst = ((size.ncouls // cfg.blk_ig) * (size.ngpown // cfg.blk_igp)
-                  * (size.nbands // cfg.blk_band))
-        overhead_s = n_inst * GRID_OVERHEAD_S
+        # the SAME model the tuner ranks with (incl. lane-fill): a config
+        # selected under one model must be reported under it too
+        cfg = _version_config(version, size)
+        hbm = vpu_model.pallas_bytes(size, cfg)
+        with_ovh, _, overhead_s = vpu_model.pallas_step_terms(size, cfg, mix)
+        compute_s = with_ovh - overhead_s
+        extra["block_config"] = (cfg.blk_ig, cfg.blk_igp, cfg.blk_band)
 
     # customized attainable ceiling = flops at the pass-mix rate
     attainable = flops / (iters * mix.passes / PASS_RATE)
+
+    extra.update({
+        "overhead_s": overhead_s, "passes_per_iter": mix.passes,
+        "flops_per_iter": mix.flops,
+        # hierarchical roofline: the VMEM level (the paper's L1/L2
+        # analogue). per-iter VMEM traffic ~= operand reads + select
+        # intermediates spilled to VMEM between VPU ops (~24 f32
+        # touches) — constant across versions, so AI_VMEM tracks the
+        # flops-per-iter; AI_HBM is what the blocking steps move.
+        "vmem_bytes": iters * 24 * 4.0,
+        "ai_vmem": flops / (iters * 24 * 4.0),
+        "ai_hbm": flops / hbm})
 
     rep = roofline.RooflineReport(
         name=f"gpp-{version}-{size.name}",
@@ -166,16 +132,7 @@ def _model_report(version: str, size: problem.GppSize) -> roofline.RooflineRepor
         collective_s=0.0,
         customized_peak_flops=attainable,
         mxu_fraction=0.0,
-        extra={"overhead_s": overhead_s, "passes_per_iter": mix.passes,
-               "flops_per_iter": mix.flops,
-               # hierarchical roofline: the VMEM level (the paper's L1/L2
-               # analogue). per-iter VMEM traffic ~= operand reads + select
-               # intermediates spilled to VMEM between VPU ops (~24 f32
-               # touches) — constant across versions, so AI_VMEM tracks the
-               # flops-per-iter; AI_HBM is what the blocking steps move.
-               "vmem_bytes": iters * 24 * 4.0,
-               "ai_vmem": flops / (iters * 24 * 4.0),
-               "ai_hbm": flops / hbm},
+        extra=extra,
     )
     return rep
 
@@ -183,21 +140,21 @@ def _model_report(version: str, size: problem.GppSize) -> roofline.RooflineRepor
 def _run_version(version: str, inputs_bench, inputs_tiny, ref_tiny,
                  measure_cpu: bool = True):
     if version in variants.VARIANTS:
-        fn = jax.jit(variants.VARIANTS[version])
+        fn = ops.jitted_variant(version)   # cached per version — no re-jit
         runner = lambda x: fn(x)
     else:
-        cfg = pallas_gpp.CONFIGS[version]
+        cfg = pallas_gpp.CONFIGS.get(version, pallas_gpp.V9)
 
         def runner(x):
             return pallas_gpp.gpp_pallas(x, cfg, interpret=True)
 
     # correctness at TINY (pallas configs need divisibility: use tiny cfg)
-    if version in pallas_gpp.CONFIGS:
-        tiny_cfg = dataclasses.replace(
-            pallas_gpp.CONFIGS[version], blk_ig=32, blk_igp=4, blk_band=4)
-        a, x = pallas_gpp.gpp_pallas(inputs_tiny, tiny_cfg, interpret=True)
-    else:
+    if version in variants.VARIANTS:
         a, x = runner(inputs_tiny)
+    else:
+        base = pallas_gpp.CONFIGS.get(version, pallas_gpp.V9)
+        tiny_cfg = dataclasses.replace(base, blk_ig=32, blk_igp=4, blk_band=4)
+        a, x = pallas_gpp.gpp_pallas(inputs_tiny, tiny_cfg, interpret=True)
     ar, xr = ref_tiny
     rel = max(
         float(np.max(np.abs(np.asarray(a) - ar)) / np.max(np.abs(ar))),
@@ -216,6 +173,21 @@ def _run_version(version: str, inputs_bench, inputs_tiny, ref_tiny,
     return rel, cpu_ms
 
 
+NOTES = {
+    "v0": "baseline: divides, abs(), 3-way branch, igp-stream",
+    "v1": "divides -> reciprocals",
+    "v2": "3-way branch -> masked selects",
+    "v3": "abs() -> squared-magnitude compares",
+    "v4": "serialize band: AI up (ideal-cache bytes)",
+    "v5": "hoist mat across iw",
+    "v6": "Pallas blocking, small blocks + wrong aqsm layout (regression)",
+    "v7": "aqsm index swap (lane-aligned)",
+    "v8": "block-size tuning (sweep): overhead amortized",
+    "v9": "fused VMEM scratch accumulation + parallel grid dims",
+    "v10": "autotuned v9 (repro.tune per-size pick)",
+}
+
+
 def run_journey(size_name: str = "si214", *, measure_cpu: bool = True,
                 verbose: bool = True) -> List[JourneyRow]:
     size = problem.SIZES[size_name]
@@ -224,27 +196,16 @@ def run_journey(size_name: str = "si214", *, measure_cpu: bool = True,
     ref_tiny = ref.ref_numpy(inputs_tiny)
 
     rows = []
-    notes = {
-        "v0": "baseline: divides, abs(), 3-way branch, igp-stream",
-        "v1": "divides -> reciprocals",
-        "v2": "3-way branch -> masked selects",
-        "v3": "abs() -> squared-magnitude compares",
-        "v4": "serialize band: AI up (ideal-cache bytes)",
-        "v5": "hoist mat across iw",
-        "v6": "Pallas blocking, small blocks + wrong aqsm layout (regression)",
-        "v7": "aqsm index swap (lane-aligned)",
-        "v8": "block-size tuning (sweep): overhead amortized",
-    }
-    for v in ("v0", "v1", "v2", "v3", "v4", "v5", "v6", "v7", "v8"):
+    for v in VERSIONS:
         rel, cpu_ms = _run_version(v, inputs_bench, inputs_tiny, ref_tiny,
                                    measure_cpu=measure_cpu)
         rep = _model_report(v, size)
-        rows.append(JourneyRow(v, cpu_ms, rel, rep, notes[v]))
+        rows.append(JourneyRow(v, cpu_ms, rel, rep, NOTES[v]))
         if verbose:
             r = rows[-1]
             print(f"{v}: err={rel:.1e} cpu={cpu_ms and f'{cpu_ms:.1f}ms'} "
                   f"compute={rep.compute_s:.3f}s mem={rep.memory_s*1e3:.1f}ms "
-                  f"-> {r.modeled_tflops:.2f} TF/s ({notes[v]})")
+                  f"-> {r.modeled_tflops:.2f} TF/s ({NOTES[v]})")
     return rows
 
 
@@ -252,7 +213,9 @@ def sweep_blocks(size_name: str = "si214",
                  igs=(128, 256, 512, 1024), igps=(128, 256),
                  bbs=(8, 16, 32, 64, 128)) -> List[Dict]:
     """v8 tuning: evaluate the analytic model over a block-size grid.
-    Returns rows sorted by modeled step time (the hillclimb artifact)."""
+    Returns rows sorted by modeled step time (the hillclimb artifact).
+    Superseded by repro.tune (which generalizes the space to any size and
+    adds the measurement pass) but kept as the paper-step artifact."""
     size = problem.SIZES[size_name]
     mix = OP_MIX["v8"]
     out = []
@@ -264,9 +227,8 @@ def sweep_blocks(size_name: str = "si214",
                 cfg = pallas_gpp.BlockConfig("sweep", big, bigp, bb, True)
                 if cfg.vmem_bytes() > TPU_V5E.vmem_bytes:
                     continue
-                hbm = _pallas_bytes(size, cfg)
-                n_inst = ((size.ncouls // big) * (size.ngpown // bigp)
-                          * (size.nbands // bb))
+                hbm = vpu_model.pallas_bytes(size, cfg)
+                n_inst = vpu_model.grid_instances(size, cfg)
                 compute = size.inner_iters * mix.passes / PASS_RATE
                 t = max(compute + n_inst * GRID_OVERHEAD_S,
                         hbm / TPU_V5E.hbm_bw)

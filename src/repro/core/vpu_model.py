@@ -1,0 +1,149 @@
+"""VPU machine model + GPP instruction census, shared by `core.journey`
+(the paper's Table-I harness) and `repro.tune` (the autotuner).
+
+Extracted from journey.py so the tuner can rank block configs with the same
+analytic model the journey reports against, without a core<->tune import
+cycle. journey.py re-exports everything here for backward compatibility.
+
+Model constants (documented assumptions):
+  VPU issue rate 4 ops/lane-cycle x 1024 lanes x 0.94 GHz = 3.85e12 pass/s
+  (an all-FMA stream then sustains 7.7e12 FLOP/s = hw.TPU_V5E.vpu_flops);
+  grid-step issue overhead 0.3 us per grid instance (DMA issue + sequencing
+  when the block is too small to hide it) for the band-serialized kernels;
+  0.12 us for the fused-accumulator kernels (v9+), where the igp/ig axes are
+  declared `parallel` (dimension_semantics) and the output read-modify-write
+  is off the critical path, so sequencing overlaps the VPU work;
+  lane-granularity DMA inflation: an array whose minor (lane) dim tiles
+  below 128 pays 128/dim in traffic (v6's aqsm layout).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core.hw import TPU_V5E
+from repro.kernels.gpp import pallas_gpp, problem
+
+PASS_RATE = 4 * 1024 * 0.94e9          # VPU passes/s (4 ALUs x 8x128 lanes)
+FLOP_PEAK = TPU_V5E.vpu_flops          # all-FMA ceiling (2 flops/pass)
+GRID_OVERHEAD_S = 0.3e-6               # per grid instance (band-serialized)
+GRID_OVERHEAD_FUSED_S = 0.12e-6        # per instance, fused acc + parallel dims
+SCAN_OVERHEAD_S = 1.0e-6               # per XLA scan step (loop latency)
+# passes per op class: fma pairs mul+add in one pass (2 flops); divides and
+# sqrt are multi-pass NR sequences on the VPU (the paper's long-latency ops).
+PASSES = {"basic": 1.0, "fma": 1.0, "rcp": 4.0, "sqrt": 8.0, "div": 8.0}
+FLOPS = {"basic": 1.0, "fma": 2.0, "rcp": 1.0, "sqrt": 1.0, "div": 1.0}
+
+
+@dataclasses.dataclass(frozen=True)
+class OpMix:
+    """Instruction census per inner (ig,igp,band,iw) iteration."""
+    basic: float
+    fma: float = 0.0
+    rcp: float = 0.0
+    sqrt: float = 0.0
+    div: float = 0.0
+
+    def _dot(self, table) -> float:
+        return (self.basic * table["basic"] + self.fma * table["fma"]
+                + self.rcp * table["rcp"] + self.sqrt * table["sqrt"]
+                + self.div * table["div"])
+
+    @property
+    def passes(self) -> float:
+        return self._dot(PASSES)
+
+    @property
+    def flops(self) -> float:
+        return self._dot(FLOPS)
+
+
+# censuses audited against the planar-f32 arithmetic in variants.py /
+# pallas_gpp.py (complex mul = 2 fma + 2 mul; |z|^2 = 1 fma + 1 mul; the
+# select/compare chain is pass-only "basic" work):
+OP_MIX = {
+    # divides + abs() + 3-way branch + per-iw mat recompute
+    "v0": OpMix(basic=58, fma=14, sqrt=2, div=4),
+    # divides -> reciprocals (3 rcp/iter: wdiffr, cden1, cden2)
+    "v1": OpMix(basic=60, fma=14, rcp=3, sqrt=2),
+    # 3-way -> zero-init + masked selects (2 fewer selects)
+    "v2": OpMix(basic=58, fma=14, rcp=3, sqrt=2),
+    # abs()/sqrt -> squared-magnitude compares
+    "v3": OpMix(basic=58, fma=14, rcp=3),
+    # band-serial: same mix, memory-side change
+    "v4": OpMix(basic=58, fma=14, rcp=3),
+    # mat hoisted across iw: one cmul + 2 vcoul muls amortized over nw
+    "v5": OpMix(basic=54, fma=14, rcp=3),
+    "v6": OpMix(basic=54, fma=14, rcp=3),
+    "v7": OpMix(basic=54, fma=14, rcp=3),
+    "v8": OpMix(basic=54, fma=14, rcp=3),
+    # v9/v10: fused accumulation is a memory/sequencing change — the per-iter
+    # arithmetic census is identical to v8
+    "v9": OpMix(basic=54, fma=14, rcp=3),
+    "v10": OpMix(basic=54, fma=14, rcp=3),
+}
+
+
+def grid_instances(size: problem.GppSize, cfg: pallas_gpp.BlockConfig) -> int:
+    return ((size.ncouls // cfg.blk_ig) * (size.ngpown // cfg.blk_igp)
+            * (size.nbands // cfg.blk_band))
+
+
+def pallas_bytes(size: problem.GppSize, cfg: pallas_gpp.BlockConfig) -> float:
+    """HBM traffic for a Pallas config, including lane-granularity DMA
+    inflation (a tile whose minor/lane dim is below the 128-lane DMA
+    granularity pays 128/dim on that array's traffic):
+      * aqsm in v6 layout (minor dim = band) — the journey's v6 regression;
+      * any config tiling igp below 128 (minor dim of wtilde/eps, and of
+        aqsm in the transposed layout) — keeps the tuner honest about
+        lane-misaligned candidates.
+    The inflation only applies when the array itself is wide enough to tile
+    at 128 (a problem with ngpown < 128 pays it unavoidably, equally for
+    every candidate)."""
+    b = pallas_gpp.hbm_traffic_model(size, cfg)
+    if not cfg.aqsm_transposed and cfg.blk_band < 128:
+        n_ig = size.ncouls // cfg.blk_ig
+        base = n_ig * 2 * 4 * size.ngpown * size.nbands
+        b += base * (128.0 / cfg.blk_band - 1.0)
+    if cfg.blk_igp < min(128, size.ngpown):
+        infl = 128.0 / cfg.blk_igp - 1.0
+        wt_eps = 4 * 4 * size.ncouls * size.ngpown
+        b += wt_eps * infl
+        if cfg.aqsm_transposed:
+            n_ig = size.ncouls // cfg.blk_ig
+            b += n_ig * 2 * 4 * size.ngpown * size.nbands * infl
+    return float(b)
+
+
+def pallas_overhead_s(size: problem.GppSize,
+                      cfg: pallas_gpp.BlockConfig) -> float:
+    per = GRID_OVERHEAD_FUSED_S if cfg.fused_acc else GRID_OVERHEAD_S
+    return grid_instances(size, cfg) * per
+
+
+def lane_fill(size: problem.GppSize, cfg: pallas_gpp.BlockConfig) -> float:
+    """Fraction of the 128 VREG lanes a tile fills (lanes = igp). A block
+    narrower than the achievable lane width wastes the rest of every VPU
+    pass — the compute-side cost of lane misalignment (the traffic side is
+    in pallas_bytes). Relative to what the problem allows: ngpown < 128
+    caps every candidate equally."""
+    achievable = min(128, size.ngpown)
+    return min(cfg.blk_igp, achievable) / achievable
+
+
+def pallas_step_terms(size: problem.GppSize, cfg: pallas_gpp.BlockConfig,
+                      mix: OpMix) -> Tuple[float, float, float]:
+    """(compute_s incl. overhead, memory_s, overhead_s) for a Pallas config."""
+    compute = size.inner_iters * mix.passes / PASS_RATE / lane_fill(size, cfg)
+    overhead = pallas_overhead_s(size, cfg)
+    memory = pallas_bytes(size, cfg) / TPU_V5E.hbm_bw
+    return compute + overhead, memory, overhead
+
+
+def pallas_step_s(size: problem.GppSize, cfg: pallas_gpp.BlockConfig,
+                  mix: OpMix = OP_MIX["v9"]) -> float:
+    """Modeled step time: max(compute+overhead, memory) — the perfect-overlap
+    roofline the journey reports."""
+    compute, memory, _ = pallas_step_terms(size, cfg, mix)
+    return max(compute, memory)

@@ -1,11 +1,17 @@
 """Public GPP kernel API.
 
     from repro.kernels.gpp import ops
-    ach, asx = ops.gpp(inputs, version="v8")
+    ach, asx = ops.gpp(inputs, version="v10")
 
-v0–v5 dispatch to the pure-JAX variants; v6–v8 to the Pallas kernel
-(interpret=True on CPU — the container has no TPU; on a real TPU pass
-interpret=False). `inputs` is the planar dict from problem.make_inputs.
+v0–v5 dispatch to the pure-JAX variants (jitted once per version, cached);
+v6–v9 to the Pallas kernel under that version's static BlockConfig (clamped
+to small problems); v10 dispatches through the repro.tune autotuner — the
+tuned config for (size, backend) is looked up in the JSON cache (and tuned
+on a miss: model-ranked, measurement-verified when cheap enough).
+
+Pallas runs interpret=True on CPU — the container has no TPU; on a real TPU
+pass interpret=False (or leave None to autodetect). `inputs` is the planar
+dict from problem.make_inputs.
 """
 
 from __future__ import annotations
@@ -15,9 +21,17 @@ from typing import Dict, Optional, Tuple
 
 import jax
 
-from repro.kernels.gpp import pallas_gpp, variants
+from repro.kernels.gpp import pallas_gpp, problem, variants
 
-DEFAULT_VERSION = "v8"
+DEFAULT_VERSION = "v10"
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_variant(version: str):
+    """One jitted callable per pure-JAX variant for the process lifetime
+    (jax.jit at every gpp() call would rebuild the dispatch wrapper and
+    re-hash the pytree structure each time)."""
+    return jax.jit(variants.VARIANTS[version])
 
 
 def _on_tpu() -> bool:
@@ -27,19 +41,39 @@ def _on_tpu() -> bool:
         return False
 
 
+def size_of_inputs(inputs: Dict) -> problem.GppSize:
+    """Recover the GppSize of a planar input dict (named if it matches a
+    registered size, else 'custom')."""
+    ncouls, ngpown = inputs["wtilde_re"].shape
+    nw, nbands = inputs["wx"].shape
+    for s in problem.SIZES.values():
+        if (s.ncouls, s.ngpown, s.nbands, s.nw) == (ncouls, ngpown, nbands,
+                                                    nw):
+            return s
+    return problem.GppSize("custom", nbands=nbands, ngpown=ngpown,
+                           ncouls=ncouls, nw=nw)
+
+
 def gpp(inputs: Dict, version: str = DEFAULT_VERSION, *,
         interpret: Optional[bool] = None,
         block_config: Optional[pallas_gpp.BlockConfig] = None
         ) -> Tuple[jax.Array, jax.Array]:
     """Run the GPP kernel. Returns (achtemp, asxtemp), complex64 (nw,)."""
     if version in variants.VARIANTS:
-        return jax.jit(variants.VARIANTS[version])(inputs)
-    if version not in pallas_gpp.CONFIGS and block_config is None:
-        raise ValueError(f"unknown GPP version {version!r}")
-    cfg = block_config or pallas_gpp.CONFIGS[version]
+        return jitted_variant(version)(inputs)
+    cfg = block_config
+    if cfg is None:
+        if version in pallas_gpp.CONFIGS:
+            cfg = pallas_gpp.CONFIGS[version].clamped(size_of_inputs(inputs))
+        elif version == "v10":
+            from repro.tune import tuner   # deferred: tune is optional here
+            cfg = tuner.best_config(size_of_inputs(inputs))
+        else:
+            raise ValueError(f"unknown GPP version {version!r}")
     if interpret is None:
         interpret = not _on_tpu()
     return pallas_gpp.gpp_pallas(inputs, cfg, interpret=interpret)
 
 
 gpp_v8 = functools.partial(gpp, version="v8")
+gpp_v10 = functools.partial(gpp, version="v10")

@@ -1,5 +1,6 @@
 """GPP Pallas TPU kernel — the paper's v6 (cache blocking), v7 (index swap)
-and v8 (block-size tuning) steps, made *explicit* through BlockSpecs.
+and v8 (block-size tuning) steps, made *explicit* through BlockSpecs, plus
+the beyond-the-paper v9 step (fused VMEM scratch accumulation).
 
 Grid: (n_igp_blocks, n_ig_blocks, n_band_blocks) — band innermost, so the
 output block (indexed by igp/ig only) is revisited across band steps and
@@ -20,6 +21,13 @@ In-kernel layout (TPU 8x128 VREG lanes):
         per-band read is a sublane row, broadcast straight onto lanes.
   v8: same code as v7 with tuned (larger) blocks — lanes filled (BLK_IGP>=128),
       VMEM working set sized for double-buffering (see VMEM_MODEL).
+  v9: fused accumulation — the per-(igp,ig) partial sums live in a VMEM
+      scratch accumulator (pl.pallas_call scratch_shapes) instead of
+      read-modify-writing the output block every band step; outputs are
+      written once, on the last band step. With the output RMW off the
+      critical path the igp/ig grid axes are declared `parallel`
+      (dimension_semantics), so Mosaic may overlap grid sequencing with the
+      VPU work. v10 is v9 under an autotuned BlockConfig (repro.tune).
 
 Numerics: planar f32; validated in interpret mode against ref.ref_numpy
 (complex128) by tests/test_gpp_kernel.py.
@@ -34,6 +42,11 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax>=0.5 renames TPUCompilerParams -> CompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
 
 from repro.kernels.gpp.problem import LIMITONE, LIMITTWO, TOL_ZERO, GppSize
 
@@ -45,6 +58,7 @@ class BlockConfig:
     blk_igp: int
     blk_band: int
     aqsm_transposed: bool   # v7/v8 layout swap
+    fused_acc: bool = False  # v9+: VMEM scratch accumulators + parallel dims
 
     def vmem_bytes(self, nw: int = 2) -> int:
         """Analytic VMEM working set (×2 for double buffering on inputs)."""
@@ -54,7 +68,18 @@ class BlockConfig:
         inputs += 2 * self.blk_band * self.blk_igp * 4        # aqsm tile
         inputs += self.blk_band * nw * 4 + self.blk_ig * 4    # wx, vcoul
         live = 14 * t_ig_igp                                  # intermediates
-        return 2 * inputs + live
+        total = 2 * inputs + live
+        if self.fused_acc:
+            total += 4 * nw * 4                               # scratch accs
+        return total
+
+    def clamped(self, size: GppSize) -> "BlockConfig":
+        """Shrink blocks to fit a smaller problem (power-of-two dims keep
+        divisibility; gpp_pallas re-asserts it)."""
+        return dataclasses.replace(
+            self, blk_ig=min(self.blk_ig, size.ncouls),
+            blk_igp=min(self.blk_igp, size.ngpown),
+            blk_band=min(self.blk_band, size.nbands))
 
 
 # canonical journey configs. v6: first blocking attempt — small band blocks
@@ -65,24 +90,20 @@ class BlockConfig:
 V6 = BlockConfig("v6", blk_ig=256, blk_igp=128, blk_band=8, aqsm_transposed=False)
 V7 = BlockConfig("v7", blk_ig=256, blk_igp=128, blk_band=8, aqsm_transposed=True)
 V8 = BlockConfig("v8", blk_ig=512, blk_igp=128, blk_band=32, aqsm_transposed=True)
+# v9: v8's tuned blocks + fused scratch accumulation. v10 has no static
+# config — it is v9 under whatever BlockConfig repro.tune picks per size.
+V9 = BlockConfig("v9", blk_ig=512, blk_igp=128, blk_band=32,
+                 aqsm_transposed=True, fused_acc=True)
 
-CONFIGS = {"v6": V6, "v7": V7, "v8": V8}
+CONFIGS = {"v6": V6, "v7": V7, "v8": V8, "v9": V9}
 
 
-def _kernel(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
-            aqsn_re_ref, aqsn_im_ref, aqsm_re_ref, aqsm_im_ref,
-            wx_ref, vcoul_ref,
-            ach_re_ref, ach_im_ref, asx_re_ref, asx_im_ref,
-            *, cfg: BlockConfig, nw: int):
-    band_step = pl.program_id(2)
-
-    @pl.when(band_step == 0)
-    def _init():
-        ach_re_ref[...] = jnp.zeros_like(ach_re_ref)
-        ach_im_ref[...] = jnp.zeros_like(ach_im_ref)
-        asx_re_ref[...] = jnp.zeros_like(asx_re_ref)
-        asx_im_ref[...] = jnp.zeros_like(asx_im_ref)
-
+def _band_sweep(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
+                aqsn_re_ref, aqsn_im_ref, aqsm_re_ref, aqsm_im_ref,
+                wx_ref, vcoul_ref, *, cfg: BlockConfig, nw: int):
+    """The in-block band sweep shared by the v6–v8 and v9 kernels: reduce
+    this grid instance's (BLK_IG, BLK_IGP, BLK_BAND) tile down to nw
+    (ach_re, ach_im, asx_re, asx_im) scalars."""
     wt_re = wt_re_ref[...]            # (BIG, BIGP) — resident across bands
     wt_im = wt_im_ref[...]
     eps_re = eps_re_ref[...]
@@ -165,14 +186,68 @@ def _kernel(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
 
     zero = jnp.float32(0.0)
     init = tuple((zero, zero, zero, zero) for _ in range(nw))
-    accs = jax.lax.fori_loop(0, cfg.blk_band, band_iter, init)
+    return jax.lax.fori_loop(0, cfg.blk_band, band_iter, init)
 
+
+def _kernel(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
+            aqsn_re_ref, aqsn_im_ref, aqsm_re_ref, aqsm_im_ref,
+            wx_ref, vcoul_ref,
+            ach_re_ref, ach_im_ref, asx_re_ref, asx_im_ref,
+            *, cfg: BlockConfig, nw: int):
+    """v6–v8: the output block is revisited across band steps and
+    read-modify-written in place (@pl.when(band_step == 0) zero-init)."""
+    band_step = pl.program_id(2)
+
+    @pl.when(band_step == 0)
+    def _init():
+        ach_re_ref[...] = jnp.zeros_like(ach_re_ref)
+        ach_im_ref[...] = jnp.zeros_like(ach_im_ref)
+        asx_re_ref[...] = jnp.zeros_like(asx_re_ref)
+        asx_im_ref[...] = jnp.zeros_like(asx_im_ref)
+
+    accs = _band_sweep(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
+                       aqsn_re_ref, aqsn_im_ref, aqsm_re_ref, aqsm_im_ref,
+                       wx_ref, vcoul_ref, cfg=cfg, nw=nw)
     for iw in range(nw):
         a_re, a_im, x_re, x_im = accs[iw]
         ach_re_ref[0, 0, iw] += a_re
         ach_im_ref[0, 0, iw] += a_im
         asx_re_ref[0, 0, iw] += x_re
         asx_im_ref[0, 0, iw] += x_im
+
+
+def _kernel_fused(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
+                  aqsn_re_ref, aqsn_im_ref, aqsm_re_ref, aqsm_im_ref,
+                  wx_ref, vcoul_ref,
+                  ach_re_ref, ach_im_ref, asx_re_ref, asx_im_ref,
+                  acc_ref,
+                  *, cfg: BlockConfig, nw: int):
+    """v9: partial sums accumulate in a (4, nw) VMEM scratch across the
+    band steps; the output block is written exactly once, on the last
+    step. No output RMW per band step -> igp/ig can be `parallel`."""
+    band_step = pl.program_id(2)
+
+    @pl.when(band_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    accs = _band_sweep(wt_re_ref, wt_im_ref, eps_re_ref, eps_im_ref,
+                       aqsn_re_ref, aqsn_im_ref, aqsm_re_ref, aqsm_im_ref,
+                       wx_ref, vcoul_ref, cfg=cfg, nw=nw)
+    for iw in range(nw):
+        a_re, a_im, x_re, x_im = accs[iw]
+        acc_ref[0, iw] += a_re
+        acc_ref[1, iw] += a_im
+        acc_ref[2, iw] += x_re
+        acc_ref[3, iw] += x_im
+
+    @pl.when(band_step == pl.num_programs(2) - 1)
+    def _flush():
+        for iw in range(nw):
+            ach_re_ref[0, 0, iw] = acc_ref[0, iw]
+            ach_im_ref[0, 0, iw] = acc_ref[1, iw]
+            asx_re_ref[0, 0, iw] = acc_ref[2, iw]
+            asx_im_ref[0, 0, iw] = acc_ref[3, iw]
 
 
 def gpp_pallas(inputs: Dict, cfg: BlockConfig, *,
@@ -212,7 +287,16 @@ def gpp_pallas(inputs: Dict, cfg: BlockConfig, *,
     out_spec = pl.BlockSpec((1, 1, nw), lambda i, j, b: (i, j, 0))
     out_shape = jax.ShapeDtypeStruct((n_igp, n_ig, nw), jnp.float32)
 
-    kern = functools.partial(_kernel, cfg=cfg, nw=nw)
+    extra = {}
+    if cfg.fused_acc:
+        kern = functools.partial(_kernel_fused, cfg=cfg, nw=nw)
+        extra["scratch_shapes"] = [pltpu.VMEM((4, nw), jnp.float32)]
+        # the band axis carries the scratch accumulator -> arbitrary; the
+        # igp/ig axes have no cross-instance state -> parallel
+        extra["compiler_params"] = _CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    else:
+        kern = functools.partial(_kernel, cfg=cfg, nw=nw)
     outs = pl.pallas_call(
         kern,
         grid=(n_igp, n_ig, n_b),
@@ -222,6 +306,7 @@ def gpp_pallas(inputs: Dict, cfg: BlockConfig, *,
         out_specs=[out_spec, out_spec, out_spec, out_spec],
         out_shape=[out_shape] * 4,
         interpret=interpret,
+        **extra,
     )(f["wtilde_re"], f["wtilde_im"], f["eps_re"], f["eps_im"],
       aqsn_re, aqsn_im, aqsm_re, aqsm_im, wx, vcoul)
 

@@ -1,0 +1,15 @@
+"""Model-guided, measurement-verified autotuning for the GPP Pallas kernel.
+
+The paper's v8 is a hand-run block-size sweep frozen into one static config;
+this package re-runs that sweep per (problem size, backend): `space`
+enumerates divisibility- and VMEM-feasible BlockConfigs, `tuner` ranks them
+with the analytic roofline model (core.vpu_model), optionally times the
+top-K with the real harness in `measure`, and persists the winner to a JSON
+cache so `ops.gpp(..., version="v10")` dispatches to a tuned config
+automatically. See DESIGN.md §Autotuner.
+"""
+
+from repro.tune.space import candidates
+from repro.tune.tuner import TunedConfig, best_config, rank, tune
+
+__all__ = ["candidates", "rank", "tune", "best_config", "TunedConfig"]

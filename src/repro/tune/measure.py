@@ -1,0 +1,44 @@
+"""Timing harness for the tuner's measurement pass.
+
+Median-of-reps wall clock around the compiled (or interpreted) kernel with
+`jax.block_until_ready` fencing — the same discipline as benchmarks/run.py:
+warmup calls first (compile/trace cost excluded), then `reps` timed calls,
+report the median (robust to scheduler noise).
+
+On CPU the Pallas kernel only runs in interpret mode, which is orders of
+magnitude slower than a real TPU but preserves the *relative* cost of
+configs at small sizes; `tuner.tune` only enables measurement on CPU below
+`MEASURE_MAX_ITERS` so the pass stays cheap.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict
+
+import jax
+
+from repro.kernels.gpp import pallas_gpp
+
+# largest size.inner_iters the CPU (interpret-mode) measurement pass will
+# time; beyond this the model-only ranking is used.
+MEASURE_MAX_ITERS = 1 << 17
+
+
+def time_config(inputs: Dict, cfg: pallas_gpp.BlockConfig, *,
+                interpret: bool, warmup: int = 1, reps: int = 3) -> float:
+    """Median seconds per call of the Pallas kernel under `cfg`."""
+    def call():
+        out = pallas_gpp.gpp_pallas(inputs, cfg, interpret=interpret)
+        jax.block_until_ready(out)
+        return out
+
+    for _ in range(max(warmup, 1)):
+        call()
+    times = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        call()
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)

@@ -1,0 +1,180 @@
+"""Model-then-measure block-size tuner with a persisted JSON cache.
+
+Flow (DESIGN.md §Autotuner):
+  1. `rank(size)` — enumerate the feasible space (tune.space) and sort by
+     the analytic roofline model (core.vpu_model.pallas_step_s): compute
+     passes + per-instance grid overhead vs HBM traffic, max() of the two.
+  2. `tune(size)` — optionally time the model's top-K with the real harness
+     (tune.measure) and let measurement override the model's order. On CPU
+     the kernel runs in interpret mode, so measurement is only attempted
+     below measure.MEASURE_MAX_ITERS; on TPU it always runs (compiled).
+  3. The winner is persisted to `<cache_dir>/gpp_tune.json`, keyed by
+     (problem dims, backend, kernel version), so repeated
+     `ops.gpp(..., version="v10")` calls dispatch straight to the tuned
+     config. Cache dir: $REPRO_TUNE_CACHE, else ./runs/tune.
+
+An in-process memo sits in front of the JSON file; `clear_memo()` resets it
+(tests point $REPRO_TUNE_CACHE at a tmp dir).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional, Tuple
+
+import jax
+
+from repro.core import vpu_model
+from repro.kernels.gpp import pallas_gpp, problem
+from repro.tune import measure, space
+
+CACHE_ENV = "REPRO_TUNE_CACHE"
+CACHE_FILE = "gpp_tune.json"
+DEFAULT_VERSION = "v10"
+
+_MEMO: Dict[str, "TunedConfig"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    config: pallas_gpp.BlockConfig
+    modeled_s: float
+    measured_s: Optional[float]      # None when the measurement pass skipped
+    key: str
+    source: str                      # "model" | "measured" | "cache"
+
+    def to_json(self) -> Dict:
+        return {"config": dataclasses.asdict(self.config),
+                "modeled_s": self.modeled_s,
+                "measured_s": self.measured_s,
+                "key": self.key, "source": self.source}
+
+    @staticmethod
+    def from_json(d: Dict) -> "TunedConfig":
+        return TunedConfig(config=pallas_gpp.BlockConfig(**d["config"]),
+                           modeled_s=d["modeled_s"],
+                           measured_s=d.get("measured_s"),
+                           key=d["key"], source="cache")
+
+
+def cache_key(size: problem.GppSize, backend: str, version: str) -> str:
+    return (f"{size.ncouls}x{size.ngpown}x{size.nbands}x{size.nw}"
+            f"|{backend}|{version}")
+
+
+def _cache_dir() -> str:
+    return os.environ.get(CACHE_ENV, os.path.join("runs", "tune"))
+
+
+def _cache_path(cache_dir: Optional[str]) -> str:
+    return os.path.join(cache_dir or _cache_dir(), CACHE_FILE)
+
+
+def _load_cache(cache_dir: Optional[str]) -> Dict:
+    path = _cache_path(cache_dir)
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return {}
+
+
+def _store_cache(cache_dir: Optional[str], entries: Dict) -> None:
+    path = _cache_path(cache_dir)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    # atomic replace: a crashed writer never leaves a truncated cache
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path), suffix=".tmp")
+    with os.fdopen(fd, "w") as fh:
+        json.dump(entries, fh, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def clear_memo() -> None:
+    _MEMO.clear()
+
+
+def rank(size: problem.GppSize, *, version: str = DEFAULT_VERSION
+         ) -> List[Tuple[pallas_gpp.BlockConfig, float]]:
+    """Feasible configs sorted by modeled step time (deterministic
+    tie-break: bigger blocks first — fewer grid instances)."""
+    fused = version not in ("v6", "v7", "v8")
+    mix = vpu_model.OP_MIX.get(version, vpu_model.OP_MIX["v9"])
+    scored = [(cfg, vpu_model.pallas_step_s(size, cfg, mix))
+              for cfg in space.candidates(size, fused=fused)]
+    scored.sort(key=lambda ct: (ct[1], -ct[0].blk_band, -ct[0].blk_ig,
+                                -ct[0].blk_igp))
+    return scored
+
+
+def _should_measure(size: problem.GppSize, backend: str) -> bool:
+    if backend == "tpu":
+        return True
+    return size.inner_iters <= measure.MEASURE_MAX_ITERS
+
+
+def tune(size: problem.GppSize, *, version: str = DEFAULT_VERSION,
+         backend: Optional[str] = None, measure_mode: Optional[bool] = None,
+         top_k: int = 3, warmup: int = 1, reps: int = 3,
+         cache_dir: Optional[str] = None, use_cache: bool = True,
+         seed: int = 0) -> TunedConfig:
+    """Pick the best BlockConfig for (size, backend, version).
+
+    measure_mode: True forces the timing pass, False forces model-only,
+    None (default) measures iff the backend is TPU or the size is small
+    enough for CPU interpret timing. The result is memoized in-process and
+    persisted to the JSON cache (use_cache=False bypasses both)."""
+    backend = backend or jax.default_backend()
+    key = cache_key(size, backend, version)
+    # memo per cache *file*, not just per key — two explicit cache_dirs must
+    # not see each other's results
+    memo_key = (os.path.abspath(_cache_path(cache_dir)), key)
+
+    if use_cache:
+        if memo_key in _MEMO:
+            return _MEMO[memo_key]
+        disk = _load_cache(cache_dir)
+        if key in disk:
+            try:
+                tc = TunedConfig.from_json(disk[key])
+            except (KeyError, TypeError):
+                pass    # schema-stale entry (e.g. BlockConfig field rename)
+            else:       # -> fall through and re-tune
+                _MEMO[memo_key] = tc
+                return tc
+
+    ranked = rank(size, version=version)
+    if not ranked:
+        raise ValueError(f"no feasible BlockConfig for {size}")
+
+    do_measure = (measure_mode if measure_mode is not None
+                  else _should_measure(size, backend))
+    best_cfg, best_model_s = ranked[0]
+    measured_s = None
+    if do_measure and top_k > 0:
+        inputs = problem.make_inputs(size, seed=seed)
+        interpret = backend != "tpu"
+        timed = []
+        for cfg, model_s in ranked[:top_k]:
+            t = measure.time_config(inputs, cfg, interpret=interpret,
+                                    warmup=warmup, reps=reps)
+            timed.append((t, model_s, cfg))
+        timed.sort(key=lambda x: x[0])
+        measured_s, best_model_s, best_cfg = timed[0]
+
+    tc = TunedConfig(config=dataclasses.replace(best_cfg, name=version),
+                     modeled_s=best_model_s, measured_s=measured_s, key=key,
+                     source="measured" if measured_s is not None else "model")
+    if use_cache:
+        _MEMO[memo_key] = tc
+        disk = _load_cache(cache_dir)
+        disk[key] = tc.to_json()
+        _store_cache(cache_dir, disk)
+    return tc
+
+
+def best_config(size: problem.GppSize, **kwargs) -> pallas_gpp.BlockConfig:
+    """The tuned BlockConfig for `size` (tune() shorthand)."""
+    return tune(size, **kwargs).config

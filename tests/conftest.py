@@ -1,7 +1,19 @@
+import atexit
 import os
+import shutil
 import sys
+import tempfile
 
 # src layout import without install; single real CPU device (the dry-run's
 # 512 forced host devices are scoped to launch/dryrun.py and the subprocess
 # tests ONLY — per the multi-pod dry-run contract).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# the GPP autotuner persists winners to $REPRO_TUNE_CACHE (default
+# ./runs/tune) — point the whole test session at a throwaway dir so tests
+# never read or write a developer's real cache (unconditionally: an
+# inherited value would leak stale tuned configs into the tests and test
+# winners into the developer's cache).
+_tune_cache = tempfile.mkdtemp(prefix="repro-tune-test-")
+os.environ["REPRO_TUNE_CACHE"] = _tune_cache
+atexit.register(shutil.rmtree, _tune_cache, ignore_errors=True)

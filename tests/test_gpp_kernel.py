@@ -40,7 +40,7 @@ def test_variants_match_oracle(size, version):
 
 
 @pytest.mark.parametrize("size", SIZES, ids=lambda s: s.name)
-@pytest.mark.parametrize("version", ["v6", "v7", "v8"])
+@pytest.mark.parametrize("version", ["v6", "v7", "v8", "v9"])
 def test_pallas_matches_oracle(size, version):
     cfg = pallas_gpp.CONFIGS[version]
     cfg = dataclasses.replace(
@@ -59,12 +59,14 @@ def test_pallas_block_shape_sweep():
     size = problem.GppSize("sw", nbands=16, ngpown=16, ncouls=64)
     inp = problem.make_inputs(size, seed=3)
     ach, asx = _run_ref(inp)
+    # (aqsm_transposed, fused_acc): fused always rides the v7+ layout
     for blk_ig in (16, 32, 64):
         for blk_igp in (4, 16):
             for blk_band in (4, 8, 16):
-                for tr in (False, True):
+                for tr, fused in ((False, False), (True, False),
+                                  (True, True)):
                     cfg = pallas_gpp.BlockConfig(
-                        "t", blk_ig, blk_igp, blk_band, tr)
+                        "t", blk_ig, blk_igp, blk_band, tr, fused_acc=fused)
                     a, x = pallas_gpp.gpp_pallas(inp, cfg, interpret=True)
                     assert _rel(a, ach) < RTOL, cfg
                     assert _rel(x, asx) < RTOL, cfg
@@ -79,8 +81,17 @@ def test_ops_dispatch():
     cfg = dataclasses.replace(pallas_gpp.V8, blk_ig=32, blk_igp=4, blk_band=4)
     a, x = ops.gpp(inp, version="v8", block_config=cfg, interpret=True)
     assert _rel(a, ach) < RTOL
+    # static Pallas versions auto-clamp their blocks to small problems
+    a, x = ops.gpp(inp, version="v9")
+    assert _rel(a, ach) < RTOL
     with pytest.raises(ValueError):
         ops.gpp(inp, version="v99")
+
+
+def test_jitted_variant_cached():
+    """gpp() must reuse one jitted callable per version (the per-call
+    re-jit rebuilt the dispatch wrapper every time)."""
+    assert ops.jitted_variant("v5") is ops.jitted_variant("v5")
 
 
 # ---------------------------------------------------------------------------

@@ -16,14 +16,17 @@ from repro.core.journey import (OP_MIX, _model_report, run_journey,
                                 sweep_blocks)
 from repro.kernels.gpp import pallas_gpp, problem, ref, variants
 
-ORDER = ["v0", "v1", "v2", "v3", "v4", "v5", "v6", "v7", "v8"]
+ORDER = ["v0", "v1", "v2", "v3", "v4", "v5", "v6", "v7", "v8", "v9", "v10"]
+PAPER_ORDER = ORDER[:9]                       # the paper stops at v8
 
 # per-version oracle tolerance at TINY: planar-f32 arithmetic vs complex128.
 # The reciprocal rewrite (v1+) and the Pallas accumulation order (v6+) each
 # cost a little precision; all stay comfortably inside the 1e-5 budget the
-# system test enforces.
+# system test enforces. v9/v10 share v8's arithmetic (fused accumulation
+# changes where partial sums live, not their order within a block).
 TOL = {"v0": 1e-6, "v1": 1e-6, "v2": 1e-6, "v3": 1e-6,
-       "v4": 2e-6, "v5": 2e-6, "v6": 2e-6, "v7": 2e-6, "v8": 2e-6}
+       "v4": 2e-6, "v5": 2e-6, "v6": 2e-6, "v7": 2e-6, "v8": 2e-6,
+       "v9": 2e-6, "v10": 2e-6}
 
 
 def _rel_err(got, want):
@@ -34,8 +37,9 @@ def _rel_err(got, want):
 def test_every_version_matches_oracle_at_tiny(version):
     inputs = problem.make_inputs(problem.TINY)
     ar, xr = ref.ref_numpy(inputs)
-    if version in pallas_gpp.CONFIGS:
-        cfg = dataclasses.replace(pallas_gpp.CONFIGS[version],
+    if version not in variants.VARIANTS:
+        cfg = dataclasses.replace(pallas_gpp.CONFIGS.get(version,
+                                                         pallas_gpp.V9),
                                   blk_ig=32, blk_igp=4, blk_band=4)
         a, x = pallas_gpp.gpp_pallas(inputs, cfg, interpret=True)
     else:
@@ -56,8 +60,15 @@ def test_modeled_tflops_non_decreasing_within_tolerance():
     for a, b, va, vb in zip(tf, tf[1:], ORDER, ORDER[1:]):
         assert b >= a * 0.97, (f"{vb} ({b:.3f} TF/s) regressed >3% vs "
                                f"{va} ({a:.3f} TF/s)")
-    assert tf[-1] > tf[0] * 1.2          # headline: v8 >= 1.2x v0
-    assert max(tf) == pytest.approx(tf[ORDER.index("v5")], rel=0.01)
+    assert tf[-1] > tf[0] * 1.2          # headline: v10 >= 1.2x v0
+    # within the paper's steps the peak is v5 (the Pallas steps pay grid
+    # overhead for exact traffic); the beyond-paper fused/tuned steps must
+    # take the overall lead
+    paper_tf = tf[:len(PAPER_ORDER)]
+    assert max(paper_tf) == pytest.approx(tf[ORDER.index("v5")], rel=0.01)
+    assert max(tf) == tf[-1]             # v10 leads end-to-end
+    assert byv["v9"].modeled_tflops >= byv["v8"].modeled_tflops
+    assert byv["v10"].modeled_tflops >= byv["v9"].modeled_tflops
 
 
 def test_sweep_configs_feasible_and_sorted():

@@ -1,0 +1,222 @@
+"""repro.tune coverage: candidate-space feasibility invariants, the
+model-then-measure tuner, the JSON cache round-trip, v10 dispatch through
+ops.gpp, and the BENCH_*.json artifact + compare regression gate."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from _prop import given, settings, st
+
+from repro.core import vpu_model
+from repro.core.hw import TPU_V5E
+from repro.kernels.gpp import ops, pallas_gpp, problem, ref
+from repro.tune import measure, space, tuner
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _rel(a, b):
+    return float(np.max(np.abs(np.asarray(a) - b)) / np.max(np.abs(b)))
+
+
+# ---------------------------------------------------------------------------
+# candidate space
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("size_name", ["tiny", "bench", "si214", "si510"])
+def test_candidates_feasible(size_name):
+    """Every candidate exactly tiles every axis and fits the VMEM budget."""
+    size = problem.SIZES[size_name]
+    cands = space.candidates(size)
+    assert cands, size_name
+    for cfg in cands:
+        assert size.ncouls % cfg.blk_ig == 0, cfg
+        assert size.ngpown % cfg.blk_igp == 0, cfg
+        assert size.nbands % cfg.blk_band == 0, cfg
+        assert cfg.vmem_bytes(size.nw) <= TPU_V5E.vmem_bytes, cfg
+        assert cfg.fused_acc
+
+
+@settings(max_examples=12, deadline=None)
+@given(nbands=st.sampled_from([8, 32, 96, 1024, 2560]),
+       ngpown=st.sampled_from([8, 64, 128, 1024]),
+       ncouls=st.sampled_from([64, 512, 8192, 20480]))
+def test_candidates_feasible_property(nbands, ngpown, ncouls):
+    size = problem.GppSize("prop", nbands=nbands, ngpown=ngpown,
+                           ncouls=ncouls)
+    for cfg in space.candidates(size):
+        assert size.ncouls % cfg.blk_ig == 0
+        assert size.ngpown % cfg.blk_igp == 0
+        assert size.nbands % cfg.blk_band == 0
+        assert cfg.vmem_bytes(size.nw) <= TPU_V5E.vmem_bytes
+
+
+def test_rank_sorted_and_deterministic():
+    ranked = tuner.rank(problem.SIZES["si214"])
+    times = [t for _, t in ranked]
+    assert times == sorted(times)
+    assert ranked == tuner.rank(problem.SIZES["si214"])
+
+
+# ---------------------------------------------------------------------------
+# tuned-never-worse-than-v8 (in the shared analytic model)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(nbands=st.sampled_from([256, 1024, 2560]),
+       ngpown=st.sampled_from([128, 1024, 2560]),
+       ncouls=st.sampled_from([4096, 8192, 20480]))
+def test_tuned_config_never_worse_than_v8_in_model(nbands, ngpown, ncouls):
+    """For any size the static v8 config can run at all, the tuner's pick
+    must model at least as fast (it minimizes the same model over a space
+    that contains a fused config with v8's blocks)."""
+    size = problem.GppSize("prop", nbands=nbands, ngpown=ngpown,
+                           ncouls=ncouls)
+    v8 = pallas_gpp.V8
+    if (size.ncouls % v8.blk_ig or size.ngpown % v8.blk_igp
+            or size.nbands % v8.blk_band):
+        return                                   # v8 can't even run here
+    v8_s = vpu_model.pallas_step_s(size, v8, vpu_model.OP_MIX["v8"])
+    best_cfg, best_s = tuner.rank(size)[0]
+    assert best_s <= v8_s * (1 + 1e-12), (best_cfg, best_s, v8_s)
+
+
+# ---------------------------------------------------------------------------
+# tune + cache round-trip
+# ---------------------------------------------------------------------------
+
+def test_tune_cache_round_trip(tmp_path, monkeypatch):
+    cache = str(tmp_path / "tune")
+    tuner.clear_memo()
+    size = problem.TINY
+    tc = tuner.tune(size, cache_dir=cache, measure_mode=False)
+    path = os.path.join(cache, tuner.CACHE_FILE)
+    assert os.path.exists(path)
+    on_disk = json.load(open(path))
+    assert tc.key in on_disk
+
+    # a fresh process state must hit the disk cache, not re-tune
+    tuner.clear_memo()
+    monkeypatch.setattr(tuner, "rank",
+                        lambda *a, **k: pytest.fail("cache missed"))
+    tc2 = tuner.tune(size, cache_dir=cache, measure_mode=False)
+    assert tc2.source == "cache"
+    assert tc2.config == tc.config
+    assert tc2.modeled_s == tc.modeled_s
+
+
+def test_tune_measured_pass_and_memo(tmp_path):
+    """The measurement pass really times the kernel (measured_s set) and
+    the in-process memo serves repeat calls."""
+    tuner.clear_memo()
+    cache = str(tmp_path / "tune")
+    tc = tuner.tune(problem.TINY, cache_dir=cache, measure_mode=True,
+                    top_k=2, reps=1, warmup=1)
+    assert tc.source == "measured"
+    assert tc.measured_s is not None and tc.measured_s > 0
+    assert tuner.tune(problem.TINY, cache_dir=cache) is tc   # memo hit
+
+
+def test_corrupt_cache_is_ignored(tmp_path):
+    cache = str(tmp_path / "tune")
+    os.makedirs(cache)
+    with open(os.path.join(cache, tuner.CACHE_FILE), "w") as fh:
+        fh.write("{not json")
+    tuner.clear_memo()
+    tc = tuner.tune(problem.TINY, cache_dir=cache, measure_mode=False)
+    assert tc.config.blk_ig > 0
+
+
+# ---------------------------------------------------------------------------
+# v9 / v10 numerics + dispatch
+# ---------------------------------------------------------------------------
+
+def test_v9_v10_match_oracle_at_tiny():
+    """Acceptance: v9/v10 within 1e-5 of the complex128 oracle at TINY;
+    v10 goes through the tuner cache."""
+    tuner.clear_memo()
+    inp = problem.make_inputs(problem.TINY)
+    ar, xr = ref.ref_numpy(inp)
+    for version in ("v9", "v10"):
+        a, x = ops.gpp(inp, version=version)
+        assert _rel(a, ar) < 1e-5, version
+        assert _rel(x, xr) < 1e-5, version
+    # the dispatch memoized a tuned config for (TINY, cpu, v10)
+    key = tuner.cache_key(problem.TINY, "cpu", "v10")
+    assert any(mk[1] == key for mk in tuner._MEMO)
+
+
+def test_tuned_config_runs_fused():
+    cfg = tuner.best_config(problem.TINY, measure_mode=False)
+    assert cfg.fused_acc
+    assert cfg.name == "v10"
+
+
+# ---------------------------------------------------------------------------
+# BENCH artifact + compare gate
+# ---------------------------------------------------------------------------
+
+def _artifact(rows):
+    sys.path.insert(0, ROOT)
+    from benchmarks import report
+    return report.make_artifact(rows)
+
+
+def test_artifact_schema_and_parse():
+    sys.path.insert(0, ROOT)
+    from benchmarks import report
+    art = _artifact([{"name": "x", "us_per_call": 3.0,
+                      "derived": "modeled_tflops=4.1;step_s=0.36;"
+                                 "dominant=compute"}])
+    assert art["schema"] == report.SCHEMA
+    row = art["rows"][0]
+    assert row["metrics"] == {"modeled_tflops": 4.1, "step_s": 0.36}
+
+
+def test_compare_flags_synthetic_regression(tmp_path):
+    """Acceptance: compare exits nonzero on a >10% synthetic regression."""
+    sys.path.insert(0, ROOT)
+    from benchmarks import report
+    old = [{"name": "gpp_si214_v10", "us_per_call": None,
+            "derived": "modeled_tflops=4.0;step_s=0.36"}]
+    new = [{"name": "gpp_si214_v10", "us_per_call": None,
+            "derived": "modeled_tflops=3.0;step_s=0.48"}]   # -25% / +33%
+    p_old, p_new = str(tmp_path / "old.json"), str(tmp_path / "new.json")
+    report.write_artifact(old, p_old)
+    report.write_artifact(new, p_new)
+    assert report.run_compare(p_old, p_new) == 1
+    assert report.run_compare(p_old, p_new, warn_only=True) == 0
+    assert report.run_compare(p_old, p_old) == 0
+    # improvements alone never gate
+    assert report.run_compare(p_new, p_old) == 0
+
+    regs, imps, _ = report.compare(report.load_artifact(p_old),
+                                   report.load_artifact(p_new))
+    assert any("modeled_tflops" in r for r in regs)
+    assert any("step_s" in r for r in regs)
+    assert not imps
+
+
+def test_compare_cli_exit_codes(tmp_path):
+    """The CLI contract CI relies on (exit 1 = gate failure)."""
+    sys.path.insert(0, ROOT)
+    from benchmarks import report
+    old = [{"name": "r", "us_per_call": None, "derived": "step_s=1.0"}]
+    new = [{"name": "r", "us_per_call": None, "derived": "step_s=2.0"}]
+    p_old, p_new = str(tmp_path / "o.json"), str(tmp_path / "n.json")
+    report.write_artifact(old, p_old)
+    report.write_artifact(new, p_new)
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-m", "benchmarks.report",
+                        "--compare", p_old, p_new], cwd=ROOT, env=env,
+                       capture_output=True, text=True)
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout
+    r = subprocess.run([sys.executable, "-m", "benchmarks.report",
+                        "--compare", p_old, p_new, "--warn-only"],
+                       cwd=ROOT, env=env, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr

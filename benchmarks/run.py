@@ -23,6 +23,10 @@ Tables:
                          runs/dryrun/*.json written by launch/dryrun.py)
   train_step_cpu       — measured wall-time of a reduced-config train step
                          per architecture (the CPU-executable signal)
+  serve                — slot-scheduler serving stats on a reduced model
+                         (decode steps / occupancy are deterministic;
+                         latency/throughput fields are wall clock). Also
+                         reachable via the --serve shortcut.
 """
 
 from __future__ import annotations
@@ -161,6 +165,46 @@ def train_step_cpu():
         _csv(f"train_step_{arch}", dt * 1e6, "reduced-config fwd+bwd on CPU")
 
 
+def serve():
+    """Slot-level continuous-batching stats: a mixed-length workload with
+    more requests than slots on a reduced model. decode_steps / prefills /
+    new_tokens / occupancy are deterministic (fixed workload, greedy or
+    per-request keyed sampling); ttft/queue/tok_per_s are wall clock and
+    therefore informational only (no gate-list metric names)."""
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_config, reduce_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=128)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 4 + i % 7),
+                    max_new_tokens=(4 if i % 3 else 32),
+                    temperature=(0.7 if i % 2 else 0.0))
+            for i in range(12)]
+    out, stats = eng.run(reqs, collect_stats=True)
+    e = stats["engine"]
+    _csv("serve_engine", e["wall_s"] * 1e6,
+         f"decode_steps={e['decode_steps']};prefills={e['prefills']};"
+         f"new_tokens={e['new_tokens']};occupancy={e['occupancy']:.3f};"
+         f"tok_per_s={e['tok_per_s']:.1f};"
+         f"mean_ttft_ms={e['mean_ttft_s'] * 1e3:.1f};"
+         f"mean_queue_ms={e['mean_queue_wait_s'] * 1e3:.1f}")
+    ttfts = [r.ttft_s for r in stats["requests"].values()]
+    waits = [r.queue_wait_s for r in stats["requests"].values()]
+    _csv("serve_latency", None,
+         f"p50_ttft_ms={np.percentile(ttfts, 50) * 1e3:.1f};"
+         f"p95_ttft_ms={np.percentile(ttfts, 95) * 1e3:.1f};"
+         f"p50_queue_ms={np.percentile(waits, 50) * 1e3:.1f};"
+         f"p95_queue_ms={np.percentile(waits, 95) * 1e3:.1f}")
+
+
 TABLES = {
     "gpp_journey": table1_gpp_journey,
     "roofline_terms": fig_roofline_terms,
@@ -169,6 +213,7 @@ TABLES = {
     "gpp_tuner": gpp_tuner,
     "model_cells": model_cells,
     "train_step_cpu": train_step_cpu,
+    "serve": serve,
 }
 
 # the cheap, deterministic-model subset CI benchmarks and the committed
@@ -185,8 +230,12 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the rows as a BENCH_*.json artifact "
                          "(schema: benchmarks/report.py)")
+    ap.add_argument("--serve", action="store_true",
+                    help="shortcut for --only serve (slot-scheduler stats)")
     args = ap.parse_args()
-    if args.only is None:
+    if args.serve:
+        todo = ["serve"]
+    elif args.only is None:
         todo = list(TABLES)
     elif args.only == "fast":
         todo = list(FAST_TABLES)

@@ -1,6 +1,7 @@
 """Serve a small model with batched requests (deliverable-b serving path):
-continuous-batching-lite engine, greedy + temperature sampling, measured
-tokens/sec.
+slot-level continuous batching — finished slots refill from the queue
+mid-flight — with greedy + temperature sampling and per-request
+latency/throughput stats.
 
     PYTHONPATH=src python examples/serve_batched.py --requests 8 --batch 4
 """
@@ -38,13 +39,20 @@ def main():
             for i in range(args.requests)]
 
     t0 = time.perf_counter()
-    out = engine.run(reqs)
+    out, stats = engine.run(reqs, collect_stats=True)
     dt = time.perf_counter() - t0
+    e = stats["engine"]
     total = sum(len(v) for v in out.values())
     print(f"served {len(reqs)} requests / {total} tokens "
           f"in {dt:.2f}s ({total/dt:.1f} tok/s, batch={args.batch})")
+    print(f"  decode_steps={e['decode_steps']} prefills={e['prefills']} "
+          f"occupancy={e['occupancy']:.2f} "
+          f"mean_ttft={e['mean_ttft_s']*1e3:.0f}ms "
+          f"mean_queue_wait={e['mean_queue_wait_s']*1e3:.0f}ms")
     for rid in sorted(out)[:4]:
-        print(f"  req {rid}: {out[rid][:10]}{'...' if len(out[rid])>10 else ''}")
+        st = stats["requests"][rid]
+        print(f"  req {rid}: {out[rid][:10]}{'...' if len(out[rid])>10 else ''}"
+              f"  (ttft {st.ttft_s*1e3:.0f}ms, {st.tok_per_s:.1f} tok/s)")
 
 
 if __name__ == "__main__":

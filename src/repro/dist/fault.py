@@ -26,8 +26,28 @@ from typing import Any, Callable, List, Optional, Tuple
 PyTree = Any
 
 
+def _boot_id() -> Optional[str]:
+    """Identity of the current boot (Linux); None where unavailable."""
+    try:
+        with open("/proc/sys/kernel/random/boot_id") as fh:
+            return fh.read().strip()
+    except OSError:
+        return None
+
+
 class HeartbeatFile:
-    """Liveness beacon: {"step", "time"} JSON, atomically replaced."""
+    """Liveness beacon: {"step", "time", "mono", "boot"} JSON, atomically
+    replaced.
+
+    Staleness math runs on `mono` (time.monotonic(), CLOCK_MONOTONIC —
+    shared by every process within one boot and immune to NTP steps); the
+    wall-clock "time" field is kept purely for human-readable logs. A
+    wall clock that jumps backwards under NTP skew must never make a live
+    worker look stale (or a dead one look fresh). CLOCK_MONOTONIC is
+    per-boot, so `mono` is only trusted when the beat's `boot` id matches
+    the reader's (same host, same boot); a supervisor on another host, or
+    a read across a reboot, falls back to the wall clock — the only
+    cross-boot-comparable timestamp."""
 
     def __init__(self, directory: str, name: str = "HEARTBEAT"):
         self.dir = directory
@@ -37,7 +57,8 @@ class HeartbeatFile:
     def beat(self, step: int) -> None:
         tmp = self.path + ".tmp"
         with open(tmp, "w") as fh:
-            json.dump({"step": int(step), "time": time.time()}, fh)
+            json.dump({"step": int(step), "time": time.time(),
+                       "mono": time.monotonic(), "boot": _boot_id()}, fh)
         os.replace(tmp, self.path)       # atomic: readers never see a torn beat
 
     def read(self) -> Optional[dict]:
@@ -49,7 +70,18 @@ class HeartbeatFile:
 
     def age_s(self) -> Optional[float]:
         b = self.read()
-        return None if b is None else max(0.0, time.time() - b["time"])
+        if b is None:
+            return None
+        same_boot = ("mono" in b and b.get("boot") is not None
+                     and b["boot"] == _boot_id())
+        if same_boot:
+            age = time.monotonic() - b["mono"]
+            # negative is impossible within one boot; be safe anyway
+            if age >= 0.0:
+                return age
+        # legacy beat (no mono/boot), another host, or across a reboot:
+        # wall clock is all we have
+        return max(0.0, time.time() - b["time"])
 
     def stale(self, timeout_s: float = 300.0) -> bool:
         """True when the worker should be presumed dead (no beat within

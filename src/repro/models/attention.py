@@ -41,10 +41,13 @@ def chunked_causal_attention(
     window: int = 0,
     q_offset: int = 0,
     causal: bool = True,
+    kv_valid: Optional[jax.Array] = None,
 ) -> jax.Array:
     """q: (B,Sq,H,Hd), k/v: (B,Skv,KvH,Hd). Causal by default (causal=False
     gives full bidirectional attention — encoder / cross-attention).
-    q_offset: absolute position of q[0] relative to k[0] (prefill=0)."""
+    q_offset: absolute position of q[0] relative to k[0] (prefill=0).
+    kv_valid: optional (B,Skv) bool — False columns (padding) are masked out
+    of every query's softmax, so pad tokens cannot leak into real rows."""
     b, sq, h, hd = q.shape
     _, skv, n_kv, _ = k.shape
     g = h // n_kv
@@ -73,6 +76,9 @@ def chunked_causal_attention(
             if window:
                 mask &= kv_pos[None, :] > (q_pos[:, None] - window)
             scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        if kv_valid is not None:
+            scores = jnp.where(kv_valid[:, None, None, None, :], scores,
+                               NEG_INF)
         p = jax.nn.softmax(scores, axis=-1).astype(PARAM_DTYPE)
         return jnp.einsum("bkgqs,bskd->bqkgd", p, v,
                           preferred_element_type=jnp.float32).astype(PARAM_DTYPE)
@@ -92,7 +98,10 @@ def chunked_causal_attention(
 def decode_attention(q, k_cache, v_cache, cache_len, *,
                      window: int = 0) -> jax.Array:
     """Single-token decode. q: (B,1,H,Hd); caches: (B,L,KvH,Hd).
-    cache_len: number of valid cache positions (static or traced scalar)."""
+    cache_len: number of valid cache positions — a (static or traced)
+    scalar shared by every row, or a (B,) vector for per-row lengths
+    (the slot-scheduler case, where each slot is mid-flight at its own
+    offset)."""
     b, _, h, hd = q.shape
     _, l, n_kv, _ = k_cache.shape
     g = h // n_kv
@@ -101,10 +110,16 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
     scores = jnp.einsum("bkgd,bskd->bkgs", qr, k_cache,
                         preferred_element_type=jnp.float32) * scale
     pos = jnp.arange(l)
-    mask = pos < cache_len
-    if window:
-        mask &= pos >= (cache_len - window)
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if jnp.ndim(cache_len) == 1:                         # per-row lengths
+        mask = pos[None, :] < cache_len[:, None]         # (B, L)
+        if window:
+            mask &= pos[None, :] >= (cache_len[:, None] - window)
+        scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    else:
+        mask = pos < cache_len
+        if window:
+            mask &= pos >= (cache_len - window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1).astype(PARAM_DTYPE)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache,
                      preferred_element_type=jnp.float32)

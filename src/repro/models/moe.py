@@ -39,11 +39,19 @@ def router_topk(x, w_router, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
 
 
 def moe_ffn(x, params, *, n_experts: int, k: int,
-            capacity_factor: float = 1.25) -> Tuple[jax.Array, jax.Array]:
+            capacity_factor: float = 1.25,
+            token_valid=None) -> Tuple[jax.Array, jax.Array]:
     """x: (T, D). params: {router (D,E), wi/wg/wo (E,D,F)/(E,F,D),
-    shared_wi/wg/wo optional}. Returns (out (T,D), aux_loss)."""
+    shared_wi/wg/wo optional}. Returns (out (T,D), aux_loss).
+
+    token_valid: optional (T,) bool — invalid (padding) tokens get zero
+    router weight, so they can neither claim expert capacity slots from
+    real tokens nor contribute to any output. (Capacity itself stays
+    shape-derived from T — static shapes.)"""
     t, d = x.shape
     weights, ids, aux = router_topk(x, params["router"], k)
+    if token_valid is not None:
+        weights = weights * token_valid[:, None].astype(weights.dtype)
 
     capacity = int(max(1, (t * k * capacity_factor) // n_experts))
     capacity = min(capacity, t)

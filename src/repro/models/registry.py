@@ -37,6 +37,9 @@ class Model:
     loss_fn: Callable[..., Tuple[jax.Array, Dict]]
     prefill: Callable[..., Tuple[jax.Array, PyTree]]
     decode_step: Callable[..., Tuple[jax.Array, PyTree]]
+    # single-row prefill written into one slot of a batched decode cache
+    # (continuous batching refill — see serve/engine.py)
+    prefill_into_slot: Callable[..., Tuple[jax.Array, PyTree]]
     init_cache: Callable[..., PyTree]
     cache_axes: Callable[..., PyTree]
 
@@ -54,21 +57,25 @@ def _maybe_remat(fn, remat: str):
     return jax.checkpoint(fn)
 
 
-def _moe_apply(cfg: ModelConfig, lp_moe, h, ctx):
+def _moe_apply(cfg: ModelConfig, lp_moe, h, ctx, token_valid=None):
     """Dispatch MoE FFN: shard_map EP (all-to-all token exchange) when the
     plan asks for it and the token count justifies the exchange; otherwise
-    the pure-SPMD capacity dispatch."""
+    the pure-SPMD capacity dispatch. token_valid (flattened (B*S,) bool)
+    keeps padding tokens out of the capacity competition (left-padded
+    prefill) — only the capacity path supports it."""
     b_, s, d = h.shape
     flat = h.reshape(-1, d)
     use_ep = (ctx is not None and getattr(ctx, "ep_data", False)
-              and ctx.mesh is not None and b_ * s >= 4096)
+              and ctx.mesh is not None and b_ * s >= 4096
+              and token_valid is None)
     if use_ep:
         f, aux = moe_lib.moe_ffn_ep(flat, lp_moe, n_experts=cfg.n_experts,
                                     k=cfg.experts_per_token, mesh=ctx.mesh,
                                     dp_axes=ctx.data_axes)
     else:
         f, aux = moe_lib.moe_ffn(flat, lp_moe, n_experts=cfg.n_experts,
-                                 k=cfg.experts_per_token)
+                                 k=cfg.experts_per_token,
+                                 token_valid=token_valid)
     return f.reshape(b_, s, d), aux
 
 
@@ -96,18 +103,20 @@ def _dense_stack(cfg: ModelConfig, layers, x, positions, *, remat, moe: bool,
 
 
 def _dense_prefill_stack(cfg: ModelConfig, layers, x, positions, *,
-                         moe: bool, window: int = 0, ctx=None):
+                         moe: bool, window: int = 0, ctx=None,
+                         kv_valid=None):
     """Like _dense_stack but also emits the (k, v) cache per layer."""
 
     def body(carry, lp):
         x = carry
         h = rms_norm(x, lp["ln1"], cfg.norm_eps)
         a, (k, v) = T.attn_block(lp["attn"], h, cfg, positions=positions,
-                                 window=window, ctx=ctx)
+                                 window=window, ctx=ctx, kv_valid=kv_valid)
         x = x + a
         h = rms_norm(x, lp["ln2"], cfg.norm_eps)
         if moe:
-            f, _ = _moe_apply(cfg, lp["moe"], h, ctx)
+            tv = None if kv_valid is None else kv_valid.reshape(-1)
+            f, _ = _moe_apply(cfg, lp["moe"], h, ctx, token_valid=tv)
         else:
             f = swiglu(h, lp["ffn"]["wi"], lp["ffn"]["wg"], lp["ffn"]["wo"])
         return x + f, (k, v)
@@ -521,8 +530,39 @@ def build_model(cfg: ModelConfig) -> Model:
 
     # ---- prefill -------------------------------------------------------------
 
-    def prefill(params, batch, ctx: Optional[DistCtx] = None):
-        """Full forward; returns (last-token logits, cache)."""
+    def prefill(params, batch, ctx: Optional[DistCtx] = None, *,
+                last_index=None):
+        """Full forward; returns (last-token logits, cache).
+
+        batch may carry "pad_lens" — a (B,) int32 count of LEFT pad tokens
+        per row (attention families only). Positions then start at 0 on
+        each row's first real token and pad key/value columns are masked
+        out of every softmax, so a left-padded row produces bit-identical
+        final-token logits to the unpadded prompt. MoE caveat: pad tokens
+        get zero router weight (moe_ffn token_valid) and can't claim
+        expert capacity, but capacity itself stays shape-derived from the
+        PADDED token count — when the unpadded batch already overflows an
+        expert's capacity, padding raises the ceiling and real-token drops
+        can differ, so exact equality there additionally requires the
+        padded and unpadded counts to land on the same capacity.
+
+        last_index: optional (traced) index into the sequence axis; the
+        returned logits are taken there instead of at -1. Used by
+        prefill_into_slot, where a right-padded row's last *real* token is
+        not the last position."""
+
+        def _last(x):
+            if last_index is None:
+                return x[:, -1:]
+            return jax.lax.dynamic_slice_in_dim(x, last_index, 1, axis=1)
+
+        pad_lens = batch.get("pad_lens")
+        if pad_lens is not None:
+            assert cfg.family in ("dense", "moe"), (
+                "pad_lens (left-padded prefill) is only defined for pure "
+                "attention stacks; recurrent state (ssm/hybrid) consumes "
+                f"pads and vlm/encdec prepend non-text tokens: {cfg.family}")
+
         if cfg.family == "encdec":
             enc_out = _whisper_encode(cfg, params, batch["frames"])
             x = embed(batch["tokens"], params["embed"])
@@ -533,26 +573,35 @@ def build_model(cfg: ModelConfig) -> Model:
                 remat="none", collect_cache=True)
             cache = {"k": ks, "v": vs, "xk": xks, "xv": xvs,
                      "pos": jnp.int32(s)}
-            return _logits(params, x[:, -1:]), cache
+            return _logits(params, _last(x)), cache
 
         x = embed(batch["tokens"], params["embed"])
         if cfg.family == "vlm":
             x = jnp.concatenate([batch["vis"].astype(x.dtype), x], axis=1)
         s = x.shape[1]
-        positions = jnp.arange(s)
+        if pad_lens is None:
+            positions = jnp.arange(s)
+            kv_valid = None
+        else:
+            positions = jnp.maximum(
+                jnp.arange(s)[None, :] - pad_lens[:, None], 0)
+            kv_valid = jnp.arange(s)[None, :] >= pad_lens[:, None]
 
         if cfg.family in ("dense", "vlm"):
             x, ks, vs = _dense_prefill_stack(cfg, params["layers"], x,
-                                             positions, moe=False, ctx=ctx)
+                                             positions, moe=False, ctx=ctx,
+                                             kv_valid=kv_valid)
             cache = {"k": ks, "v": vs, "pos": jnp.int32(s)}
         elif cfg.family == "moe":
             cache = {}
             if cfg.first_k_dense:
                 x, dk, dv = _dense_prefill_stack(cfg, params["dense_layers"],
-                                                 x, positions, moe=False)
+                                                 x, positions, moe=False,
+                                                 kv_valid=kv_valid)
                 cache.update({"dk": dk, "dv": dv})
             x, ks, vs = _dense_prefill_stack(cfg, params["layers"], x,
-                                             positions, moe=True, ctx=ctx)
+                                             positions, moe=True, ctx=ctx,
+                                             kv_valid=kv_valid)
             cache.update({"k": ks, "v": vs, "pos": jnp.int32(s)})
         elif cfg.family == "ssm":
             L, b_, d = cfg.n_layers, x.shape[0], cfg.d_model
@@ -569,15 +618,19 @@ def build_model(cfg: ModelConfig) -> Model:
                                     remat="none", cache={}, decode=False)
         else:
             raise ValueError(cfg.family)
-        return _logits(params, x[:, -1:]), cache
+        return _logits(params, _last(x)), cache
 
     # ---- decode --------------------------------------------------------------
 
     def decode_step(params, cache, tokens, ctx: Optional[DistCtx] = None):
-        """tokens: (B, 1). Returns (logits (B,1,V) f32, new cache)."""
+        """tokens: (B, 1). Returns (logits (B,1,V) f32, new cache).
+
+        cache["pos"] may be a scalar (lockstep decode) or a (B,) vector
+        (slot scheduler: every row at its own offset)."""
         x = embed(tokens, params["embed"])
         if cfg.family == "encdec":
-            x = x + params["dec_pos"][cache["pos"]][None, None].astype(x.dtype)
+            pe = params["dec_pos"][cache["pos"]].astype(x.dtype)
+            x = x + (pe[:, None] if pe.ndim == 2 else pe[None, None])
             x, cache = _whisper_dec_stack(cfg, params["dec_layers"], x, None,
                                           None, remat="none", cache=cache,
                                           decode=True, ctx=ctx)
@@ -605,6 +658,43 @@ def build_model(cfg: ModelConfig) -> Model:
             raise ValueError(cfg.family)
         return _logits(params, x), cache
 
+    # ---- slot refill (continuous batching) -----------------------------------
+
+    def prefill_into_slot(params, cache, slot, batch, prompt_len,
+                          ctx: Optional[DistCtx] = None):
+        """Prefill ONE request (batch row of size 1) and overwrite `slot`'s
+        cache lines in a batched decode cache, so a new request joins a
+        mid-flight batch without retracing or disturbing its batch-mates.
+
+        cache: a batched decode cache whose "pos" is a (B,) per-row vector
+          (the slot scheduler's layout — see serve/engine.py).
+        slot: (traced) row index to overwrite.
+        batch: single-row prefill inputs; "tokens" is (1, P). P may exceed
+          the real prompt (right padding to a shape bucket): pad lines land
+          beyond prompt_len, stay masked by the per-row length, and are
+          overwritten as decode advances. For ssm/hybrid (recurrent state
+          folds every token in) and moe (capacity dispatch is token-count
+          sensitive) P must equal the real prompt length.
+        prompt_len: (traced) number of valid leading positions in the row
+          — the slot's pos after admission; logits are taken at
+          prompt_len - 1 (the last real token).
+
+        Returns (logits (1,1,V), new cache). Every cache leaf has layout
+        (layers, batch, ...), so the write is one dynamic_update_slice at
+        (0, slot, 0, ...) per leaf.
+        """
+        logits, row = prefill(params, batch, ctx, last_index=prompt_len - 1)
+        new = {}
+        for key, full in cache.items():
+            if key == "pos":
+                new[key] = full.at[slot].set(
+                    jnp.asarray(prompt_len, full.dtype))
+                continue
+            upd = row[key].astype(full.dtype)
+            starts = (0, slot) + (0,) * (full.ndim - 2)
+            new[key] = jax.lax.dynamic_update_slice(full, upd, starts)
+        return logits, new
+
     return Model(
         cfg=cfg,
         param_axes=param_axes,
@@ -613,6 +703,7 @@ def build_model(cfg: ModelConfig) -> Model:
         loss_fn=loss_fn,
         prefill=prefill,
         decode_step=decode_step,
+        prefill_into_slot=prefill_into_slot,
         init_cache=functools.partial(make_cache, cfg),
         cache_axes=functools.partial(cache_logical_axes, cfg),
     )

@@ -247,14 +247,22 @@ def _qkv(lp, x, cfg: ModelConfig):
 
 
 def attn_block(lp, x, cfg: ModelConfig, *, positions, window=0, rope=True,
-               ctx=None):
-    """Full-sequence attention (train/prefill). Returns (out, (k, v))."""
+               ctx=None, kv_valid=None):
+    """Full-sequence attention (train/prefill). Returns (out, (k, v)).
+
+    positions: (S,) shared, or (B,S) per-row (left-padded prefill, where
+    each row's real tokens start at its own offset). kv_valid: optional
+    (B,S) bool marking real (non-pad) key/value columns."""
     b_, s, _ = x.shape
     q, k, v = _qkv(lp, x, cfg)
     if rope and cfg.rope_theta:
-        q = apply_rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
-        k = apply_rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
-    if cfg.use_flash_attention and window == 0 and s % 256 == 0:
+        # (B,S) positions broadcast over the head axis of the (B,H,S,Hd)
+        # rope input as (B,1,S)
+        pos_r = positions if positions.ndim == 1 else positions[:, None]
+        q = apply_rope(q.swapaxes(1, 2), pos_r, cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), pos_r, cfg.rope_theta).swapaxes(1, 2)
+    if (cfg.use_flash_attention and window == 0 and s % 256 == 0
+            and kv_valid is None):
         # Pallas flash kernel: VMEM-blocked online softmax — no (S,S)
         # score tensor ever reaches HBM (EXPERIMENTS.md §Perf iteration 2).
         # On CPU this runs in interpret mode (tests); the dry-run models its
@@ -263,7 +271,8 @@ def attn_block(lp, x, cfg: ModelConfig, *, positions, window=0, rope=True,
         # copies that misrepresent the kernel's true HBM traffic.
         out = attn_lib.flash_attention_spmd(q, k, v, ctx, causal=True)
     else:
-        out = attn_lib.chunked_causal_attention(q, k, v, window=window)
+        out = attn_lib.chunked_causal_attention(q, k, v, window=window,
+                                                kv_valid=kv_valid)
     out = matmul_rp(out.reshape(b_, s, -1), lp["wo"])
     return out, (k, v)
 
@@ -271,25 +280,39 @@ def attn_block(lp, x, cfg: ModelConfig, *, positions, window=0, rope=True,
 def attn_block_decode(lp, x, cfg: ModelConfig, *, cache_k, cache_v, pos,
                       window=0, rope=True, ctx: Optional[DistCtx] = None,
                       ring=False):
-    """One-token attention against a cache. cache_k/v: (B,L,KvH,Hd)."""
+    """One-token attention against a cache. cache_k/v: (B,L,KvH,Hd).
+
+    pos is the write position — a scalar shared by all rows (the classic
+    lockstep decode) or a (B,) vector when every batch row is at its own
+    offset (the serve engine's slot scheduler, where refilled slots join
+    mid-flight). Per-row writes use a one-hot select instead of
+    dynamic_update_slice so each row lands on its own line."""
     b_, s, _ = x.shape
     assert s == 1
+    per_row = jnp.ndim(pos) == 1
     q, k, v = _qkv(lp, x, cfg)
     if rope and cfg.rope_theta:
-        pvec = jnp.full((1,), pos, jnp.int32)
+        # scalar pos -> one shared position; vector pos -> (B,1,1) so the
+        # angle table broadcasts over heads per row
+        pvec = pos[:, None, None] if per_row else jnp.full((1,), pos, jnp.int32)
         q = apply_rope(q.swapaxes(1, 2), pvec, cfg.rope_theta).swapaxes(1, 2)
         k = apply_rope(k.swapaxes(1, 2), pvec, cfg.rope_theta).swapaxes(1, 2)
     lcache = cache_k.shape[1]
     slot = jnp.mod(pos, lcache) if ring else pos
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    if per_row:
+        oh = jnp.arange(lcache)[None, :] == slot[:, None]      # (B, L)
+        cache_k = jnp.where(oh[:, :, None, None], k, cache_k)
+        cache_v = jnp.where(oh[:, :, None, None], v, cache_v)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
     cache_len = pos + 1
     if ring:
         # ring buffer (sliding window): every slot <= cache_len-1 is valid;
         # window masking is implicit in the buffer size
         eff_len = jnp.minimum(cache_len, lcache)
         out = attn_lib.decode_attention(q, cache_k, cache_v, eff_len)
-    elif ctx is not None and ctx.kv_seq_shard:
+    elif ctx is not None and ctx.kv_seq_shard and not per_row:
         out = attn_lib.flash_decode_sharded(q, cache_k, cache_v, cache_len,
                                             ctx=ctx, window=window)
     else:

@@ -1,17 +1,42 @@
-"""Batched serving engine: continuous-batching-lite on top of the model's
-prefill/decode steps.
+"""Slot-level continuous-batching serving engine.
 
-Requests join a waiting queue; the engine packs up to `max_batch` active
-sequences into one fixed-shape decode batch (static shapes => one compiled
-decode step, the TPU-friendly design). Finished slots are refilled from the
-queue between steps by re-prefilling into the slot's cache lines. Greedy or
-temperature sampling.
+The engine owns a fixed pool of `max_batch` slots over ONE static-shape
+decode batch (static shapes => one compiled decode step, the TPU-friendly
+design). Requests wait in a FIFO admission queue; whenever a slot's request
+finishes, the slot is refilled from the queue by prefilling the new request
+into that slot's cache lines (Model.prefill_into_slot), so new requests
+join the mid-flight batch without retracing and without disturbing their
+batch-mates. One long request therefore occupies one slot, not the whole
+batch — the occupancy failure of the old wave loop (process max_batch
+requests, wait for the slowest, repeat) is gone.
+
+Per-slot state lives in _Slot (rid, tokens remaining, temperature, done
+flag, timing); per-row device state lives in the cache, whose "pos" is a
+(B,) vector so every slot decodes at its own offset (models/registry.py,
+transformer.attn_block_decode).
+
+Sampling is deterministic PER REQUEST: token i of request rid is drawn
+with fold_in(fold_in(base_key, rid), i), so identical requests produce
+identical samples regardless of slot placement, batch-mates, or admission
+order — and finished slots advance no shared RNG state (they have none to
+advance). Finished slots are masked: their pos is held so their cache rows
+stop growing, and their (discarded) sample comes from a constant dummy
+lane. Greedy (temperature=0) rows take argmax.
+
+Per-request latency/throughput stats (queue wait, TTFT, decode steps,
+tokens/s) and engine aggregates (total decode steps, slot occupancy) are
+collected on every run — `run(..., collect_stats=True)` returns them, and
+`last_stats` always holds the most recent run's aggregates (the
+benchmarks/run.py --serve table reads those into the repro-bench
+artifact).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +45,13 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models.registry import Model, build_model
 
+# right-padding shape buckets for slot prefill: one compiled
+# prefill_into_slot per bucket instead of one per distinct prompt length.
+# Exact-length families (see _bucket_len) skip bucketing: ssm/hybrid fold
+# pads into their recurrent state, and MoE capacity dispatch would let
+# pads shift the shape-derived expert capacity and claim slots.
+PREFILL_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
+
 
 @dataclasses.dataclass
 class Request:
@@ -27,7 +59,35 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 16
     temperature: float = 0.0
-    out_tokens: Optional[List[int]] = None
+    # extra single-row model inputs, e.g. {"vis": (1, n_vis, D)} for vlm or
+    # {"frames": (1, enc_seq, D)} for encdec
+    extra: Optional[Dict[str, Any]] = None
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request latency/throughput, wall-clock measured by the engine."""
+    rid: int
+    prompt_len: int
+    new_tokens: int
+    queue_wait_s: float           # enqueue -> admitted into a slot
+    ttft_s: float                 # enqueue -> first token sampled
+    decode_steps: int             # batched decode steps this request rode
+    total_s: float                # enqueue -> finished
+    tok_per_s: float              # new_tokens / (finish - admit)
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int
+    temperature: float
+    remaining: int                # new tokens still to generate
+    n_gen: int                    # tokens generated so far (rng fold index)
+    prompt_len: int
+    t_enqueue: float
+    t_admit: float
+    t_first: float
+    decode_steps: int = 0
 
 
 class ServeEngine:
@@ -38,73 +98,195 @@ class ServeEngine:
         self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
+        # never split: per-request sample keys are fold_in derivations of
+        # this base, so no shared RNG state advances across requests.
         self.rng = jax.random.PRNGKey(rng_seed)
-        self._decode = jax.jit(
-            lambda p, c, t: self.model.decode_step(p, c, t))
-        self._prefill = jax.jit(
-            lambda p, b: self.model.prefill(p, b))
-        # whole-batch sampler: greedy rows take argmax, temperature rows a
-        # categorical draw, selected per-row on device — one compiled call
-        # per step instead of a host round-trip per sequence.
-        self._sample_jit = jax.jit(self._sample_batch_impl)
+        self.last_stats: Optional[Dict[str, Any]] = None
+
+        def _decode_masked(p, c, t, active):
+            logits, new = self.model.decode_step(p, c, t)
+            # done-row masking: hold finished slots' pos so their cache
+            # rows stop growing — the step writes one (masked, invisible)
+            # line at the held position and the row costs nothing
+            # semantically.
+            new["pos"] = jnp.where(active, new["pos"], c["pos"])
+            return logits, new
+
+        self._decode = jax.jit(_decode_masked)
+        self._prefill_slot = jax.jit(
+            lambda p, c, s, b, n: self.model.prefill_into_slot(p, c, s, b, n))
+        self._sample = jax.jit(self._sample_batch_impl)
+
+    # ------------------------------------------------------------- sampling
 
     @staticmethod
     def _sample_batch_impl(logits: jax.Array, temps: jax.Array,
-                           key: jax.Array) -> jax.Array:
+                           base_key: jax.Array, rids: jax.Array,
+                           ngens: jax.Array) -> jax.Array:
+        """Whole-batch next-token sampler, one compiled call per step.
+        Greedy rows take argmax; temperature rows draw categorically with a
+        per-request key fold_in(fold_in(base, rid), token_index) — no row's
+        draw depends on its batch-mates or on any mutable RNG state."""
         lg = logits.astype(jnp.float32).reshape(logits.shape[0], -1)
         greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
-        scaled = lg / jnp.maximum(temps, 1e-6)[:, None]
-        sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+        def draw(rid, ngen, row, temp):
+            key = jax.random.fold_in(jax.random.fold_in(base_key, rid), ngen)
+            return jax.random.categorical(key, row / jnp.maximum(temp, 1e-6))
+
+        sampled = jax.vmap(draw)(rids, ngens, lg, temps).astype(jnp.int32)
         return jnp.where(temps > 0, sampled, greedy)
 
-    def _sample_batch(self, logits: jax.Array, temperatures) -> np.ndarray:
-        """Sample next tokens for the whole batch in one device call;
-        one np.asarray pulls them to the host. Returns (B,) int32."""
-        self.rng, sub = jax.random.split(self.rng)
-        temps = jnp.asarray(np.asarray(temperatures, np.float32))
-        return np.asarray(self._sample_jit(logits, temps, sub))
+    def _sample_rows(self, logits, slots: List[Optional[_Slot]]) -> np.ndarray:
+        temps = np.array([s.temperature if s else 0.0 for s in slots],
+                         np.float32)
+        rids = np.array([s.rid if s else -1 for s in slots], np.int32)
+        ngens = np.array([s.n_gen if s else 0 for s in slots], np.int32)
+        return np.asarray(self._sample(logits, jnp.asarray(temps), self.rng,
+                                       jnp.asarray(rids), jnp.asarray(ngens)))
 
-    def run(self, requests: List[Request], *, extra_inputs: Optional[Dict] = None
-            ) -> Dict[int, List[int]]:
-        """Serve a list of requests with batched decode. Returns
-        {rid: generated tokens}. Batches of size<=max_batch decode together;
-        shorter prompts are left-padded into a common prefill call."""
-        out: Dict[int, List[int]] = {}
-        queue = list(requests)
-        while queue:
-            wave = queue[: self.max_batch]
-            queue = queue[self.max_batch:]
-            b = len(wave)
-            plen = max(len(r.prompt) for r in wave)
-            toks = np.zeros((b, plen), np.int32)
-            for i, r in enumerate(wave):
-                toks[i, plen - len(r.prompt):] = r.prompt   # left pad
-            batch = {"tokens": jnp.asarray(toks)}
-            if extra_inputs:
-                batch.update({k: v[:b] for k, v in extra_inputs.items()})
-            logits, cache = self._prefill(self.params, batch)
-            live = {i: r for i, r in enumerate(wave)}
-            for r in wave:
-                out[r.rid] = []
-            temps = [r.temperature for r in wave]
-            toks = self._sample_batch(logits, temps)
-            cur = toks[:, None].copy()
-            for i, r in enumerate(wave):
-                out[r.rid].append(int(toks[i]))
-            max_new = max(r.max_new_tokens for r in wave)
-            for _ in range(max_new - 1):
-                logits, cache = self._decode(self.params, cache,
-                                             jnp.asarray(cur))
-                toks = self._sample_batch(logits, temps)
-                done = []
-                for i, r in list(live.items()):
-                    if len(out[r.rid]) >= r.max_new_tokens:
-                        done.append(i)
+    # ------------------------------------------------------------ admission
+
+    def _bucket_len(self, n: int, room: int) -> int:
+        # exact-length families: recurrent state (ssm/hybrid) folds every
+        # token in, and MoE capacity dispatch is token-count sensitive
+        # (pad tokens would shift the shape-derived expert capacity and
+        # compete for slots) — for them one trace per prompt length is the
+        # price of correctness. Pure-attention stacks are causal, so right
+        # pads are invisible to real tokens and bucketing is free. `room`
+        # caps the padded length so the row's cache lines (including any
+        # prepended vis tokens) still fit the slot.
+        if self.cfg.family in ("ssm", "hybrid", "moe"):
+            return n
+        for b in PREFILL_BUCKETS:
+            if n <= b <= room:
+                return b
+        return n
+
+    def _fresh_cache(self):
+        cache = self.model.init_cache(self.max_batch, self.cache_len)
+        # per-row positions: each slot decodes at its own offset
+        cache["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
+        return cache
+
+    def _admit(self, cache, slot_idx: int, r: Request, t_enqueue: float):
+        """Prefill r into slot_idx's cache lines; returns
+        (new cache, slot state, first sampled token)."""
+        plen = len(r.prompt)
+        if self.cfg.family == "vlm":
+            plen += self.cfg.n_vis_tokens  # vis tokens occupy cache lines
+        assert plen + r.max_new_tokens <= self.cache_len, (
+            f"request {r.rid}: prompt {plen} + max_new {r.max_new_tokens} "
+            f"exceeds cache_len {self.cache_len}")
+        vis = plen - len(r.prompt)
+        padded = self._bucket_len(len(r.prompt), self.cache_len - vis)
+        toks = np.zeros((1, padded), np.int32)
+        toks[0, : len(r.prompt)] = r.prompt      # right pad: masked by pos
+        batch = {"tokens": jnp.asarray(toks)}
+        if r.extra:
+            batch.update(r.extra)
+        t_admit = time.perf_counter()
+        logits, cache = self._prefill_slot(
+            self.params, cache, np.int32(slot_idx), batch, np.int32(plen))
+        slot = _Slot(rid=r.rid, temperature=r.temperature,
+                     remaining=r.max_new_tokens, n_gen=0, prompt_len=plen,
+                     t_enqueue=t_enqueue, t_admit=t_admit, t_first=0.0)
+        first = int(self._sample_rows(logits, [slot])[0])
+        slot.t_first = time.perf_counter()
+        slot.n_gen = 1
+        slot.remaining -= 1
+        return cache, slot, first
+
+    # ------------------------------------------------------------ scheduler
+
+    def run(self, requests: List[Request], *, collect_stats: bool = False):
+        """Serve requests with slot-level continuous batching. Returns
+        {rid: generated tokens}, or (that, stats) with collect_stats=True.
+
+        stats = {"requests": {rid: RequestStats}, "engine": {...}} — the
+        engine dict is what last_stats holds after every run."""
+        t_run = time.perf_counter()
+        queue = deque(requests)
+        t_enq = {r.rid: t_run for r in requests}
+        out: Dict[int, List[int]] = {r.rid: [] for r in requests}
+        per_req: Dict[int, RequestStats] = {}
+        slots: List[Optional[_Slot]] = [None] * self.max_batch
+        cache = self._fresh_cache()
+        cur = np.zeros((self.max_batch, 1), np.int32)
+        n_steps = 0          # global batched decode steps
+        n_prefills = 0
+        slot_steps_active = 0
+
+        def finish(i: int):
+            s = slots[i]
+            now = time.perf_counter()
+            per_req[s.rid] = RequestStats(
+                rid=s.rid, prompt_len=s.prompt_len, new_tokens=s.n_gen,
+                queue_wait_s=s.t_admit - s.t_enqueue,
+                ttft_s=s.t_first - s.t_enqueue,
+                decode_steps=s.decode_steps, total_s=now - s.t_enqueue,
+                tok_per_s=s.n_gen / max(now - s.t_admit, 1e-9))
+            slots[i] = None
+
+        while queue or any(s is not None for s in slots):
+            # refill every free slot from the queue before the next step
+            for i in range(self.max_batch):
+                if slots[i] is None and queue:
+                    r = queue.popleft()
+                    if r.max_new_tokens < 1:     # nothing to generate
+                        per_req[r.rid] = RequestStats(
+                            rid=r.rid, prompt_len=len(r.prompt),
+                            new_tokens=0, queue_wait_s=0.0, ttft_s=0.0,
+                            decode_steps=0, total_s=0.0, tok_per_s=0.0)
                         continue
-                    out[r.rid].append(int(toks[i]))
-                    cur[i, 0] = toks[i]
-                for i in done:
-                    live.pop(i)
-                if not live:
-                    break
+                    cache, slot, first = self._admit(cache, i, r,
+                                                     t_enq[r.rid])
+                    n_prefills += 1
+                    out[r.rid].append(first)
+                    cur[i, 0] = first
+                    slots[i] = slot
+                    if slot.remaining <= 0:      # max_new_tokens == 1
+                        finish(i)
+            if not any(s is not None for s in slots):
+                continue                          # queue drained via finish
+            active = np.array([s is not None for s in slots])
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur),
+                                         jnp.asarray(active))
+            n_steps += 1
+            slot_steps_active += int(active.sum())
+            toks = self._sample_rows(logits, slots)
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                tok = int(toks[i])
+                out[s.rid].append(tok)
+                cur[i, 0] = tok
+                s.n_gen += 1
+                s.remaining -= 1
+                s.decode_steps += 1
+                if s.remaining <= 0:
+                    finish(i)
+
+        wall = time.perf_counter() - t_run
+        total_new = sum(st.new_tokens for st in per_req.values())
+        engine_stats = {
+            "requests": len(requests),
+            "decode_steps": n_steps,
+            "prefills": n_prefills,
+            "new_tokens": total_new,
+            "occupancy": (slot_steps_active / (n_steps * self.max_batch)
+                          if n_steps else 1.0),
+            "wall_s": wall,
+            "tok_per_s": total_new / max(wall, 1e-9),
+            "mean_queue_wait_s": (float(np.mean([s.queue_wait_s
+                                                 for s in per_req.values()]))
+                                  if per_req else 0.0),
+            "mean_ttft_s": (float(np.mean([s.ttft_s
+                                           for s in per_req.values()]))
+                            if per_req else 0.0),
+        }
+        self.last_stats = engine_stats
+        if collect_stats:
+            return out, {"requests": per_req, "engine": engine_stats}
         return out

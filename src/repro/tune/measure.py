@@ -28,13 +28,16 @@ MEASURE_MAX_ITERS = 1 << 17
 
 def time_config(inputs: Dict, cfg: pallas_gpp.BlockConfig, *,
                 interpret: bool, warmup: int = 1, reps: int = 3) -> float:
-    """Median seconds per call of the Pallas kernel under `cfg`."""
+    """Median seconds per call of the Pallas kernel under `cfg`.
+
+    warmup=0 is honored (callers measuring cold-start/compile cost want the
+    first timed call to include it); only negative values are clamped."""
     def call():
         out = pallas_gpp.gpp_pallas(inputs, cfg, interpret=interpret)
         jax.block_until_ready(out)
         return out
 
-    for _ in range(max(warmup, 1)):
+    for _ in range(max(warmup, 0)):
         call()
     times = []
     for _ in range(max(reps, 1)):

@@ -108,6 +108,73 @@ def test_heartbeat_roundtrip(tmp_path):
     assert hb.age_s() < 60.0
 
 
+def test_heartbeat_staleness_survives_wall_clock_skew(tmp_path, monkeypatch):
+    """NTP can step the wall clock in either direction between a beat and a
+    supervisor poll; staleness math must run on CLOCK_MONOTONIC (shared by
+    all processes within one boot), with the wall-clock field kept only
+    for human-readable logs."""
+    import time as _time
+
+    from repro.dist import fault
+    from repro.dist.fault import HeartbeatFile
+    if fault._boot_id() is None:
+        pytest.skip("no boot id: mono is never trusted on this platform")
+    hb = HeartbeatFile(str(tmp_path))
+    hb.beat(3)
+    b = hb.read()
+    assert b["step"] == 3 and "time" in b and "mono" in b
+    # wall clock jumps 1h BACKWARDS after the beat: still fresh
+    monkeypatch.setattr(_time, "time", lambda: b["time"] - 3600.0)
+    assert hb.age_s() < 60.0
+    assert not hb.stale(60.0)
+    # ...and 1h FORWARDS: must not fake staleness either
+    monkeypatch.setattr(_time, "time", lambda: b["time"] + 3600.0)
+    assert not hb.stale(60.0)
+
+
+def test_heartbeat_legacy_beat_falls_back_to_wall_clock(tmp_path):
+    import json
+    import time as _time
+
+    from repro.dist.fault import HeartbeatFile
+    hb = HeartbeatFile(str(tmp_path))
+    with open(hb.path, "w") as fh:   # beat from an older worker: no "mono"
+        json.dump({"step": 1, "time": _time.time() - 10.0}, fh)
+    assert 5.0 < hb.age_s() < 60.0
+    assert hb.stale(5.0) and not hb.stale(60.0)
+
+
+def test_heartbeat_cross_boot_mono_falls_back_to_wall_clock(tmp_path):
+    """CLOCK_MONOTONIC is per-boot: a beat written on another boot/host
+    carries a mono value that is meaningless here (smaller OR larger than
+    the reader's — either direction can fake freshness or staleness).
+    Only a matching boot id makes mono trustworthy; otherwise staleness
+    falls back to wall-clock age."""
+    import json
+    import time as _time
+
+    from repro.dist.fault import HeartbeatFile
+    hb = HeartbeatFile(str(tmp_path))
+    # dead worker from a previous boot: huge mono, old wall time, no/other
+    # boot id -> wall fallback says stale
+    for boot in (None, "some-other-boot"):
+        beat = {"step": 1, "time": _time.time() - 600.0,
+                "mono": _time.monotonic() + 1e9}
+        if boot:
+            beat["boot"] = boot
+        with open(hb.path, "w") as fh:
+            json.dump(beat, fh)
+        assert hb.age_s() > 300.0
+        assert hb.stale(300.0)
+    # live worker on another host (reader's uptime much larger): a naive
+    # mono diff would be hugely positive -> must NOT fake staleness
+    with open(hb.path, "w") as fh:
+        json.dump({"step": 1, "time": _time.time() - 1.0,
+                   "mono": _time.monotonic() - 1e9,
+                   "boot": "some-other-boot"}, fh)
+    assert not hb.stale(300.0)
+
+
 def test_watchdog_flags_straggler_after_warmup():
     from repro.dist.fault import StepWatchdog
     hits = []

@@ -121,6 +121,25 @@ def test_tune_measured_pass_and_memo(tmp_path):
     assert tuner.tune(problem.TINY, cache_dir=cache) is tc   # memo hit
 
 
+def test_time_config_honors_zero_warmup(monkeypatch):
+    """An explicit warmup=0 means ZERO warmup calls (cold-start callers
+    want the first timed call to include compile/trace cost); only
+    negatives are clamped. The old max(warmup, 1) silently forced one."""
+    import jax.numpy as jnp
+    calls = []
+    monkeypatch.setattr(measure.pallas_gpp, "gpp_pallas",
+                        lambda inputs, cfg, interpret: (calls.append(1),
+                                                        jnp.zeros(()))[1])
+    measure.time_config({}, None, interpret=True, warmup=0, reps=2)
+    assert len(calls) == 2
+    calls.clear()
+    measure.time_config({}, None, interpret=True, warmup=-3, reps=2)
+    assert len(calls) == 2          # negative clamps to zero, not one
+    calls.clear()
+    measure.time_config({}, None, interpret=True, warmup=1, reps=2)
+    assert len(calls) == 3
+
+
 def test_corrupt_cache_is_ignored(tmp_path):
     cache = str(tmp_path / "tune")
     os.makedirs(cache)

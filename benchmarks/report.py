@@ -12,13 +12,21 @@ and the legacy EXPERIMENTS.md generator.
         {"name": "gpp_si214_v8",        # CSV row name (stable join key)
          "us_per_call": 1234.5,         # measured wall clock, or null
          "derived": "modeled_tflops=4.077;step_s=0.3585",   # raw CSV field
-         "metrics": {"modeled_tflops": 4.077, "step_s": 0.3585}},
+         "metrics": {"modeled_tflops": 4.077, "step_s": 0.3585},
+         "kernel_config": {             # optional: config provenance
+           "kernel": "gpp", "version": "v8",
+           "config": {"blk_ig": 512, "blk_igp": 128, "blk_band": 32},
+           "source": "static"}},        # static | model | measured | cache
         ...
       ]
     }
 
 `metrics` is `derived` parsed into the numeric key=value pairs (non-numeric
-values like `dominant=compute` are dropped). Artifacts are written by
+values like `dominant=compute` are dropped). `kernel_config`, when present,
+records which kernel version + config produced the row and whether the
+config came from the tune cache — compare mode diffs it and reports
+"config churn" notes (a tuned pick silently changing between artifacts),
+separate from metric regressions. Artifacts are written by
 `python -m benchmarks.run --json PATH` and live under runs/bench/ locally
 (BENCH_<pr>.json by convention) or as CI artifacts.
 
@@ -99,7 +107,9 @@ def make_artifact(rows: List[Dict], *, tables: Optional[List[str]] = None
         "rows": [{"name": r["name"],
                   "us_per_call": r.get("us_per_call"),
                   "derived": r.get("derived", ""),
-                  "metrics": parse_derived(r.get("derived", ""))}
+                  "metrics": parse_derived(r.get("derived", "")),
+                  **({"kernel_config": r["kernel_config"]}
+                     if r.get("kernel_config") else {})}
                  for r in rows],
     }
 
@@ -129,6 +139,13 @@ def load_artifact(path: str) -> Dict:
 # compare (regression gate)
 # ---------------------------------------------------------------------------
 
+def _fmt_kc(kc: Dict) -> str:
+    cfg = ",".join(f"{k}={v}" for k, v in sorted(kc.get("config", {}).items())
+                   if k != "name")
+    return (f"{kc.get('kernel')}/{kc.get('version')}[{cfg}]"
+            f"({kc.get('source')})")
+
+
 def _direction(metric: str) -> Optional[int]:
     """-1: lower is better, +1: higher is better, None: informational."""
     for s in HIGHER_BETTER:
@@ -156,6 +173,12 @@ def compare(old: Dict, new: Dict, *, threshold: float = 0.10,
 
     for name in sorted(set(old_rows) & set(new_rows)):
         o, n = old_rows[name], new_rows[name]
+        kc_o, kc_n = o.get("kernel_config"), n.get("kernel_config")
+        if kc_o and kc_n and kc_o != kc_n:
+            # a selected version/config changing between artifacts is worth
+            # eyes even when the modeled metrics moved inside the threshold
+            notes.append(f"config churn: {name}: {_fmt_kc(kc_o)} -> "
+                         f"{_fmt_kc(kc_n)}")
         om = dict(o.get("metrics", {}))
         nm = dict(n.get("metrics", {}))
         if include_wallclock:

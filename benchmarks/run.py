@@ -19,6 +19,9 @@ Tables:
   v8_block_sweep       — the v8 tuning sweep (paper Sec. III-v8)
   gpp_tuner            — repro.tune winners per size (model-ranked; measured
                          where the size permits CPU timing)
+  kernel_tuner         — tuned picks for the other registered kernels
+                         (flash blk_q/blk_kv, ssm blk_c) via the same
+                         generalized repro.tune flow
   model_cells          — the 40-cell dry-run roofline table (reads
                          runs/dryrun/*.json written by launch/dryrun.py)
   train_step_cpu       — measured wall-time of a reduced-config train step
@@ -57,9 +60,17 @@ def journey_rows(size: str, measure_cpu: bool = False):
     return rows
 
 
-def _csv(name, us, derived):
+def _csv(name, us, derived, kernel_config=None):
+    """Emit one row. kernel_config (optional) records the selected kernel
+    version + config and where it came from ({"kernel", "version",
+    "config", "source"}) so report.py --compare can flag config churn —
+    a tuned pick silently changing between artifacts — not just metric
+    regressions."""
     print(f"{name},{us if us is not None else ''},{derived}")
-    RESULTS.append({"name": name, "us_per_call": us, "derived": derived})
+    row = {"name": name, "us_per_call": us, "derived": derived}
+    if kernel_config:
+        row["kernel_config"] = kernel_config
+    RESULTS.append(row)
 
 
 def table1_gpp_journey():
@@ -68,10 +79,18 @@ def table1_gpp_journey():
         rows = journey_rows(size, measure_cpu=(size == "si214"))
         for r in rows:
             us = r.cpu_ms * 1e3 if r.cpu_ms else None
+            blocks = r.report.extra.get("block_config")
+            kc = None
+            if blocks:
+                kc = {"kernel": "gpp", "version": r.version,
+                      "config": {"blk_ig": blocks[0], "blk_igp": blocks[1],
+                                 "blk_band": blocks[2]},
+                      "source": "model" if r.version == "v10" else "static"}
             _csv(f"gpp_{size}_{r.version}", us,
                  f"modeled_tflops={r.modeled_tflops:.3f};"
                  f"pct_vpu_peak={r.modeled_tflops*1e12/FLOP_PEAK:.3f};"
-                 f"step_s={r.report.modeled_step_s:.4f}")
+                 f"step_s={r.report.modeled_step_s:.4f}",
+                 kernel_config=kc)
         v0, vbest = rows[0], rows[-1]
         v8 = next(r for r in rows if r.version == "v8")
         _csv(f"gpp_{size}_speedup_v8_over_v0", None,
@@ -114,6 +133,8 @@ def gpp_tuner():
     depend on one noisy interpret-mode timing choosing among near-tied
     configs; the measured pass is exercised by tests/test_tune.py and the
     ops.gpp("v10") dispatch path."""
+    import dataclasses
+
     from repro.kernels.gpp.problem import SIZES
     from repro.tune import tuner
     for name in ("tiny", "bench", "si214", "si510"):
@@ -121,7 +142,43 @@ def gpp_tuner():
         c = tc.config
         _csv(f"tuned_{name}", None,
              f"blk_ig={c.blk_ig};blk_igp={c.blk_igp};blk_band={c.blk_band};"
-             f"modeled_s={tc.modeled_s:.4g};source={tc.source}")
+             f"modeled_s={tc.modeled_s:.4g};source={tc.source}",
+             kernel_config={"kernel": "gpp", "version": "v10",
+                            "config": dataclasses.asdict(c),
+                            "source": tc.source})
+
+
+def kernel_tuner():
+    """The registry-wide generalization of gpp_tuner: every non-gpp kernel's
+    tuned pick at representative sizes, through the same model-then-measure
+    flow and (kernel, ProblemKey, backend, version) cache keying.
+    Model-only for determinism (same rationale as gpp_tuner)."""
+    import dataclasses
+
+    from repro.kernels.flash.kernel_def import FlashKey
+    from repro.kernels.ssm.kernel_def import SsmKey
+    from repro.tune import tuner
+
+    keys = [
+        # (row name, kernel, key)
+        ("flash_train_4k", "flash",
+         FlashKey(b=8, h=16, kvh=4, sq=4096, skv=4096, hd=128)),
+        ("flash_prefill_32k", "flash",
+         FlashKey(b=1, h=16, kvh=4, sq=32768, skv=32768, hd=128)),
+        ("flash_block_256", "flash",
+         FlashKey(b=4, h=8, kvh=2, sq=256, skv=256, hd=64)),
+        ("ssm_hymba_4k", "ssm", SsmKey(b=16, t=4096, c=6400, n=16)),
+        ("ssm_small", "ssm", SsmKey(b=2, t=256, c=256, n=16)),
+    ]
+    for name, kernel, key in keys:
+        tc = tuner.tune_kernel(kernel, key, use_cache=False,
+                               measure_mode=False)
+        cfg = dataclasses.asdict(tc.config)
+        dims = ";".join(f"{k}={v}" for k, v in cfg.items() if k != "name")
+        _csv(f"tuned_{name}", None,
+             f"{dims};modeled_s={tc.modeled_s:.4g};source={tc.source}",
+             kernel_config={"kernel": kernel, "version": tc.key.split("|")[-1],
+                            "config": cfg, "source": tc.source})
 
 
 def model_cells():
@@ -211,6 +268,7 @@ TABLES = {
     "fig8_locality": fig8_locality,
     "v8_block_sweep": v8_block_sweep,
     "gpp_tuner": gpp_tuner,
+    "kernel_tuner": kernel_tuner,
     "model_cells": model_cells,
     "train_step_cpu": train_step_cpu,
     "serve": serve,
@@ -219,7 +277,7 @@ TABLES = {
 # the cheap, deterministic-model subset CI benchmarks and the committed
 # baseline artifact are built from (no multi-minute train-step jits)
 FAST_TABLES = ("gpp_journey", "roofline_terms", "fig8_locality",
-               "v8_block_sweep", "gpp_tuner")
+               "v8_block_sweep", "gpp_tuner", "kernel_tuner")
 
 
 def main() -> None:

@@ -1,4 +1,47 @@
 """repro: a production-scale jax_pallas system grown from the paper's
-single-kernel roofline study (8 Steps to 3.7 TFLOP/s, arXiv:2008.11326)."""
+single-kernel roofline study (8 Steps to 3.7 TFLOP/s, arXiv:2008.11326).
+
+`import repro` is the documented entry point; the public surface is lazy
+(nothing heavy imports until first attribute access):
+
+    import repro
+    repro.list_kernels()                       # ['flash', 'gpp', 'ssm']
+    ach, asx = repro.dispatch("gpp", inputs, version="v10")
+    k = repro.get_kernel("flash")              # Kernel descriptor
+    model = repro.build_model(cfg)
+    engine = repro.ServeEngine(cfg, params)
+    rows = repro.run_journey("si214")
+"""
 
 from repro import _compat  # noqa: F401  (jax API shims; must import first)
+
+# public name -> defining module; resolved lazily on first access so that
+# `import repro` stays cheap and optional layers never import eagerly
+_EXPORTS = {
+    "get_kernel": "repro.kernels.api",
+    "dispatch": "repro.kernels.api",
+    "list_kernels": "repro.kernels.api",
+    "ServeEngine": "repro.serve.engine",
+    "Request": "repro.serve.engine",
+    "build_model": "repro.models.registry",
+    "run_journey": "repro.core.journey",
+    "tune_kernel": "repro.tune.tuner",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute {name!r}"
+                             ) from None
+    import importlib
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value        # cache: subsequent access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

@@ -1,0 +1,56 @@
+"""Shared backend policy: one place that decides whether Pallas kernels
+compile for a real TPU or run in interpret mode.
+
+Before the kernel registry, `kernels/gpp/ops.py` and `kernels/flash/ops.py`
+each carried a private `_on_tpu()` and `kernels/ssm/ssm_scan.py` hardcoded
+`interpret=True` — three policies that could (and did) drift. Every kernel
+entry point now resolves its `interpret` default through this module.
+
+Env override: `REPRO_INTERPRET=1` forces interpret mode even on TPU (kernel
+debugging), `REPRO_INTERPRET=0` forces compiled mode (fails fast on CPU
+rather than silently interpreting). Unset: autodetect (interpret iff no TPU).
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+INTERPRET_ENV = "REPRO_INTERPRET"
+
+
+def backend_name() -> str:
+    """jax.default_backend(), with a safe fallback when jax can't init."""
+    try:
+        import jax
+        return jax.default_backend()
+    except Exception:
+        return "cpu"
+
+
+def on_tpu() -> bool:
+    try:
+        import jax
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def default_interpret() -> bool:
+    """Interpret-mode default for Pallas calls: the REPRO_INTERPRET env
+    override when set ('1'/'true' -> True, '0'/'false' -> False),
+    otherwise autodetect (interpret iff not on a TPU)."""
+    env = os.environ.get(INTERPRET_ENV)
+    if env is not None:
+        v = env.strip().lower()
+        if v in ("1", "true", "yes"):
+            return True
+        if v in ("0", "false", "no"):
+            return False
+        raise ValueError(f"{INTERPRET_ENV}={env!r}: expected 0/1")
+    return not on_tpu()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """An explicit caller choice wins; None defers to default_interpret()."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -34,7 +34,8 @@ from repro.core.hw import TPU_V5E
 from repro.core.vpu_model import (  # noqa: F401
     FLOP_PEAK, FLOPS, GRID_OVERHEAD_FUSED_S, GRID_OVERHEAD_S, OP_MIX, PASSES,
     PASS_RATE, SCAN_OVERHEAD_S, OpMix)
-from repro.kernels.gpp import ops, pallas_gpp, problem, ref, variants
+from repro.kernels import api
+from repro.kernels.gpp import kernel_def, pallas_gpp, problem, ref, variants
 from repro.tune import tuner
 
 VERSIONS = ("v0", "v1", "v2", "v3", "v4", "v5", "v6", "v7", "v8", "v9",
@@ -140,13 +141,14 @@ def _model_report(version: str, size: problem.GppSize) -> roofline.RooflineRepor
 def _run_version(version: str, inputs_bench, inputs_tiny, ref_tiny,
                  measure_cpu: bool = True):
     if version in variants.VARIANTS:
-        fn = ops.jitted_variant(version)   # cached per version — no re-jit
+        fn = kernel_def.jitted_variant(version)   # cached — no re-jit
         runner = lambda x: fn(x)
     else:
         cfg = pallas_gpp.CONFIGS.get(version, pallas_gpp.V9)
 
         def runner(x):
-            return pallas_gpp.gpp_pallas(x, cfg, interpret=True)
+            return api.dispatch("gpp", x, version=version, config=cfg,
+                                interpret=True)
 
     # correctness at TINY (pallas configs need divisibility: use tiny cfg)
     if version in variants.VARIANTS:
@@ -154,7 +156,8 @@ def _run_version(version: str, inputs_bench, inputs_tiny, ref_tiny,
     else:
         base = pallas_gpp.CONFIGS.get(version, pallas_gpp.V9)
         tiny_cfg = dataclasses.replace(base, blk_ig=32, blk_igp=4, blk_band=4)
-        a, x = pallas_gpp.gpp_pallas(inputs_tiny, tiny_cfg, interpret=True)
+        a, x = api.dispatch("gpp", inputs_tiny, version=version,
+                            config=tiny_cfg, interpret=True)
     ar, xr = ref_tiny
     rel = max(
         float(np.max(np.abs(np.asarray(a) - ar)) / np.max(np.abs(ar))),

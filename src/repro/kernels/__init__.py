@@ -1,3 +1,18 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Custom-kernel layer. Each family (gpp, flash, ssm) registers itself with
+the unified registry in `repro.kernels.api` via its kernel_def module —
+`api.dispatch(name, *args, version=..., config=...)` is the one public
+entry point; the per-family ops modules are deprecation shims (gpp, flash)
+or thin wrappers (ssm)."""
+
+import warnings
+
+_WARNED = set()
+
+
+def warn_once(message: str) -> None:
+    """Emit one DeprecationWarning per message per process (shared by the
+    legacy ops shims; tests reset by clearing _WARNED). stacklevel=3 points
+    at the shim's caller."""
+    if message not in _WARNED:
+        _WARNED.add(message)
+        warnings.warn(message, DeprecationWarning, stacklevel=3)

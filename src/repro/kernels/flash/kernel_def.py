@@ -1,0 +1,188 @@
+"""Flash-attention family registration for the unified kernel registry.
+
+Before the registry, `kernels/flash/ops.py` froze `blk_q = blk_kv = 256`
+for every problem — exactly the hand-picked-constant the paper's v8 step
+warns against. This descriptor gives flash the same journey GPP got: a
+`FlashKey` ProblemKey, a power-of-two `(blk_q, blk_kv)` config space with
+VMEM clamping, and an analytic MXU/VPU/HBM roofline hook so `repro.tune`
+can rank per size. Causality is part of the key (the causal skip changes
+both the traffic and the masked-compute waste the model charges).
+
+Model assumptions (documented, mirroring core.vpu_model's style):
+  * bf16 operands (2 B) — the model path's dtype; f32 outputs/stats;
+  * MXU time = 4·elems·hd / mxu_flops (two matmuls over every computed
+    score element, 2 FLOPs each); masked halves of diagonal blocks still
+    compute — smaller blocks waste less on the causal wedge but pay more
+    per-instance grid overhead (the tuner's tradeoff);
+  * softmax/online-rescale ≈ 12 VPU passes per score element (exp ≈ 8);
+  * q is resident across the kv sweep (index map ignores the kv axis),
+    k/v re-fetch per visited (q, kv) block pair.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import backend
+from repro.core.hw import TPU_V5E
+from repro.core.vpu_model import GRID_OVERHEAD_S, PASS_RATE
+from repro.kernels import api
+from repro.kernels.flash import flash as flash_lib
+
+BLK_MENU = (32, 64, 128, 256, 512)
+SOFTMAX_PASSES = 12.0          # exp + max/sum/corr per score element
+BF16 = 2                       # operand bytes
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashKey:
+    """ProblemKey for one attention call, model-native (B,S,H,Hd) layout."""
+    b: int
+    h: int
+    kvh: int
+    sq: int
+    skv: int
+    hd: int
+    causal: bool = True
+    name: str = "attn"
+
+    def key_dims(self) -> str:
+        return (f"{self.b}x{self.h}x{self.kvh}x{self.sq}x{self.skv}"
+                f"x{self.hd}{'c' if self.causal else 'f'}")
+
+
+def _div_clamp(blk: int, s: int) -> int:
+    """Largest block <= blk that exactly tiles s. A plain min() clamp on a
+    non-dividing length would make the kernel's grid skip the tail rows
+    and return NaN garbage silently (n_q = s // blk drops the remainder)."""
+    blk = min(blk, s)
+    while s % blk:
+        blk -= 1
+    return blk
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashBlockConfig:
+    name: str = "flash"
+    blk_q: int = 256
+    blk_kv: int = 256
+
+    def clamped(self, key: FlashKey) -> "FlashBlockConfig":
+        return dataclasses.replace(self, blk_q=_div_clamp(self.blk_q, key.sq),
+                                   blk_kv=_div_clamp(self.blk_kv, key.skv))
+
+    def vmem_bytes(self, hd: int) -> int:
+        return flash_lib.vmem_bytes(self.blk_q, self.blk_kv, hd)
+
+
+def _visited_pairs(key: FlashKey, cfg: FlashBlockConfig) -> int:
+    """(q, kv) block pairs the grid actually runs (causal skips the
+    strictly-upper wedge via pl.when)."""
+    n_q, n_kv = key.sq // cfg.blk_q, key.skv // cfg.blk_kv
+    if not key.causal:
+        return n_q * n_kv
+    return sum(min(n_kv, (qi * cfg.blk_q + cfg.blk_q - 1) // cfg.blk_kv + 1)
+               for qi in range(n_q))
+
+
+class FlashKernel(api.Kernel):
+    name = "flash"
+    versions = ("ref", "pallas")
+    default_version = "pallas"
+    tunable = ("pallas",)
+
+    def problem_key(self, q, k, v, *, causal: bool = True) -> FlashKey:
+        b, sq, h, hd = q.shape
+        _, skv, kvh, _ = k.shape
+        return FlashKey(b=b, h=h, kvh=kvh, sq=sq, skv=skv, hd=hd,
+                        causal=causal)
+
+    def config_space(self, key: FlashKey, version: str
+                     ) -> List[FlashBlockConfig]:
+        out = []
+        for bq in BLK_MENU:
+            if bq > key.sq or key.sq % bq:
+                continue
+            for bkv in BLK_MENU:
+                if bkv > key.skv or key.skv % bkv:
+                    continue
+                cfg = FlashBlockConfig("tune", bq, bkv)
+                if cfg.vmem_bytes(key.hd) <= TPU_V5E.vmem_bytes:
+                    out.append(cfg)
+        return out
+
+    def clamp(self, config: FlashBlockConfig, key: FlashKey
+              ) -> FlashBlockConfig:
+        return config.clamped(key)
+
+    def static_config(self, key: FlashKey, version: str
+                      ) -> Optional[FlashBlockConfig]:
+        return FlashBlockConfig().clamped(key)     # the legacy 256/256
+
+    def tie_break(self, config: FlashBlockConfig) -> Tuple:
+        return (-config.blk_q, -config.blk_kv)
+
+    def finalize_config(self, config: FlashBlockConfig, version: str
+                        ) -> FlashBlockConfig:
+        return dataclasses.replace(config, name=version)
+
+    def model_step_s(self, key: FlashKey, config: FlashBlockConfig,
+                     version: str) -> float:
+        cfg = config.clamped(key)
+        bh = key.b * key.h
+        pairs = _visited_pairs(key, cfg)
+        elems = pairs * cfg.blk_q * cfg.blk_kv       # computed score elements
+        mxu_s = 4.0 * bh * elems * key.hd / TPU_V5E.mxu_flops
+        vpu_s = bh * elems * SOFTMAX_PASSES / PASS_RATE
+        overhead_s = bh * pairs * GRID_OVERHEAD_S
+        bytes_ = bh * (key.sq * key.hd * BF16              # q (resident)
+                       + pairs * 2 * cfg.blk_kv * key.hd * BF16   # k, v
+                       + key.sq * key.hd * 4 + key.sq * 2 * 4)    # acc, l, m
+        return max(mxu_s + vpu_s + overhead_s, bytes_ / TPU_V5E.hbm_bw)
+
+    def measure_ok(self, key: FlashKey) -> bool:
+        # interpret-mode attention is slow: only time truly tiny problems
+        return key.b * key.h * key.sq * key.skv * key.hd <= 1 << 20
+
+    def make_example(self, key: FlashKey, seed: int = 0
+                     ) -> Tuple[tuple, dict]:
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        q = jax.random.normal(ks[0], (key.b, key.sq, key.h, key.hd),
+                              jnp.bfloat16)
+        k = jax.random.normal(ks[1], (key.b, key.skv, key.kvh, key.hd),
+                              jnp.bfloat16)
+        v = jax.random.normal(ks[2], (key.b, key.skv, key.kvh, key.hd),
+                              jnp.bfloat16)
+        return (q, k, v), {"causal": key.causal}
+
+    def config_from_json(self, d: Dict) -> FlashBlockConfig:
+        return FlashBlockConfig(**d)
+
+    def run(self, q, k, v, *, version: str,
+            config: Optional[FlashBlockConfig], interpret: Optional[bool],
+            causal: bool = True):
+        """q: (B,S,H,Hd); k/v: (B,S,KvH,Hd) -> (B,S,H,Hd). Reshapes to
+        planar heads, runs the kernel, restores the layout (the contract
+        the old ops.flash_attention had)."""
+        b, sq, h, hd = q.shape
+        _, skv, kvh, _ = k.shape
+        qp = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+        kp = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+        vp = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
+        if version == "ref":
+            from repro.kernels.flash.ref import reference
+            out = reference(qp, kp, vp, causal=causal)
+        else:
+            cfg = (config or FlashBlockConfig()).clamped(
+                self.problem_key(q, k, v, causal=causal))
+            out = flash_lib.flash_attention_diff(
+                qp, kp, vp, cfg.blk_q, cfg.blk_kv, causal,
+                backend.resolve_interpret(interpret))
+        return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)
+
+
+KERNEL = api.register(FlashKernel())

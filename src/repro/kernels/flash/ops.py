@@ -1,8 +1,16 @@
-"""Public flash attention API used by models/attention.py.
+"""Legacy flash-attention entry point — a thin deprecation shim over the
+unified kernel registry.
 
-flash_attention(q, k, v): (B, S, H, Hd) x (B, S, KvH, Hd) layout (the
-model's native layout); reshapes to planar heads, runs the Pallas kernel
-(interpret on CPU), restores the layout.
+    from repro.kernels import api
+    out = api.dispatch("flash", q, k, v, causal=True)       # new API
+    # config=None -> the repro.tune cached (blk_q, blk_kv) for this size
+
+`ops.flash_attention(...)` forwards to `dispatch` (the explicit
+blk_q/blk_kv arguments become a FlashBlockConfig) and emits one
+DeprecationWarning per process. Bit-identical at every shape the requested
+blocks tile; at non-dividing shapes the clamp now rounds down to a
+dividing block (the old min() clamp silently dropped the tail rows —
+NaN output — so exact equivalence there is deliberately not preserved).
 """
 
 from __future__ import annotations
@@ -10,30 +18,20 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels.flash.flash import flash_attention_bhsd, flash_attention_diff
+from repro.kernels import api, warn_once
+from repro.kernels.flash.kernel_def import FlashBlockConfig
 
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:
-        return False
+_DEPRECATION = ("repro.kernels.flash.ops.flash_attention is deprecated; "
+                "use repro.kernels.api.dispatch('flash', q, k, v, ...)")
 
 
 def flash_attention(q, k, v, *, causal: bool = True,
                     blk_q: int = 256, blk_kv: int = 256,
                     interpret: Optional[bool] = None) -> jax.Array:
-    """q: (B,S,H,Hd); k/v: (B,S,KvH,Hd) -> (B,S,H,Hd)."""
-    b, s, h, hd = q.shape
-    _, skv, kvh, _ = k.shape
-    if interpret is None:
-        interpret = not _on_tpu()
-    blk_q = min(blk_q, s)
-    blk_kv = min(blk_kv, skv)
-    qp = q.transpose(0, 2, 1, 3).reshape(b * h, s, hd)
-    kp = k.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
-    vp = v.transpose(0, 2, 1, 3).reshape(b * kvh, skv, hd)
-    out = flash_attention_diff(qp, kp, vp, blk_q, blk_kv, causal, interpret)
-    return out.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    """q: (B,S,H,Hd); k/v: (B,S,KvH,Hd) -> (B,S,H,Hd).
+    Deprecated: use api.dispatch("flash", ...)."""
+    warn_once(_DEPRECATION)
+    return api.dispatch("flash", q, k, v, causal=causal,
+                        config=FlashBlockConfig("legacy", blk_q, blk_kv),
+                        interpret=interpret)

@@ -1,0 +1,103 @@
+"""GPP family registration for the unified kernel registry
+(`repro.kernels.api`). The versioned dispatch that used to live in
+`kernels/gpp/ops.py` — v0–v5 pure-JAX variants, v6–v9 static Pallas
+configs, v10 autotuned — expressed as a `Kernel` descriptor so gpp shares
+the dispatch/tune/bench plumbing with flash and ssm.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+
+from repro import backend
+from repro.core import vpu_model
+from repro.kernels import api
+from repro.kernels.gpp import pallas_gpp, problem, variants
+from repro.tune import measure, space
+
+
+@functools.lru_cache(maxsize=None)
+def jitted_variant(version: str):
+    """One jitted callable per pure-JAX variant for the process lifetime
+    (jax.jit at every dispatch would rebuild the wrapper and re-hash the
+    pytree structure each time)."""
+    return jax.jit(variants.VARIANTS[version])
+
+
+def size_of_inputs(inputs: Dict) -> problem.GppSize:
+    """Recover the GppSize of a planar input dict (named if it matches a
+    registered size, else 'custom')."""
+    ncouls, ngpown = inputs["wtilde_re"].shape
+    nw, nbands = inputs["wx"].shape
+    for s in problem.SIZES.values():
+        if (s.ncouls, s.ngpown, s.nbands, s.nw) == (ncouls, ngpown, nbands,
+                                                    nw):
+            return s
+    return problem.GppSize("custom", nbands=nbands, ngpown=ngpown,
+                           ncouls=ncouls, nw=nw)
+
+
+class GppKernel(api.Kernel):
+    name = "gpp"
+    versions = ("v0", "v1", "v2", "v3", "v4", "v5", "v6", "v7", "v8", "v9",
+                "v10")
+    default_version = "v10"
+    tunable = ("v10",)
+
+    def problem_key(self, inputs: Dict) -> problem.GppSize:
+        return size_of_inputs(inputs)
+
+    def config_space(self, key: problem.GppSize, version: str
+                     ) -> List[pallas_gpp.BlockConfig]:
+        fused = version not in ("v6", "v7", "v8")
+        return space.candidates(key, fused=fused)
+
+    def clamp(self, config: pallas_gpp.BlockConfig, key: problem.GppSize
+              ) -> pallas_gpp.BlockConfig:
+        return config.clamped(key)
+
+    def static_config(self, key: problem.GppSize, version: str
+                      ) -> Optional[pallas_gpp.BlockConfig]:
+        if version in pallas_gpp.CONFIGS:
+            return pallas_gpp.CONFIGS[version].clamped(key)
+        return None    # v0–v5 take no config; v10 tunes
+
+    def tie_break(self, config: pallas_gpp.BlockConfig) -> Tuple:
+        # bigger blocks first — fewer grid instances
+        return (-config.blk_band, -config.blk_ig, -config.blk_igp)
+
+    def finalize_config(self, config: pallas_gpp.BlockConfig, version: str
+                        ) -> pallas_gpp.BlockConfig:
+        return dataclasses.replace(config, name=version)
+
+    def model_step_s(self, key: problem.GppSize,
+                     config: pallas_gpp.BlockConfig, version: str) -> float:
+        mix = vpu_model.OP_MIX.get(version, vpu_model.OP_MIX["v9"])
+        return vpu_model.pallas_step_s(key, config, mix)
+
+    def measure_ok(self, key: problem.GppSize) -> bool:
+        return key.inner_iters <= measure.MEASURE_MAX_ITERS
+
+    def make_example(self, key: problem.GppSize, seed: int = 0
+                     ) -> Tuple[tuple, dict]:
+        return (problem.make_inputs(key, seed=seed),), {}
+
+    def config_from_json(self, d: Dict) -> pallas_gpp.BlockConfig:
+        return pallas_gpp.BlockConfig(**d)
+
+    def run(self, inputs: Dict, *, version: str,
+            config: Optional[pallas_gpp.BlockConfig],
+            interpret: Optional[bool]) -> Tuple[Any, Any]:
+        if version in variants.VARIANTS:
+            return jitted_variant(version)(inputs)
+        if config is None:
+            raise ValueError(f"gpp {version} needs a BlockConfig")
+        return pallas_gpp.gpp_pallas(
+            inputs, config, interpret=backend.resolve_interpret(interpret))
+
+
+KERNEL = api.register(GppKernel())

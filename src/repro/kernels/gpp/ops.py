@@ -1,17 +1,13 @@
-"""Public GPP kernel API.
+"""Legacy GPP kernel entry point — a thin deprecation shim over the unified
+kernel registry.
 
-    from repro.kernels.gpp import ops
-    ach, asx = ops.gpp(inputs, version="v10")
+    from repro.kernels import api
+    ach, asx = api.dispatch("gpp", inputs, version="v10")   # new API
 
-v0–v5 dispatch to the pure-JAX variants (jitted once per version, cached);
-v6–v9 to the Pallas kernel under that version's static BlockConfig (clamped
-to small problems); v10 dispatches through the repro.tune autotuner — the
-tuned config for (size, backend) is looked up in the JSON cache (and tuned
-on a miss: model-ranked, measurement-verified when cheap enough).
-
-Pallas runs interpret=True on CPU — the container has no TPU; on a real TPU
-pass interpret=False (or leave None to autodetect). `inputs` is the planar
-dict from problem.make_inputs.
+`ops.gpp(...)` forwards to `dispatch` bit-identically (same jitted-variant
+cache for v0–v5, same static-config clamping for v6–v9, same tuned-config
+path for v10) and emits one DeprecationWarning per process. `inputs` is the
+planar dict from problem.make_inputs.
 """
 
 from __future__ import annotations
@@ -21,58 +17,27 @@ from typing import Dict, Optional, Tuple
 
 import jax
 
-from repro.kernels.gpp import pallas_gpp, problem, variants
+from repro.kernels import api, warn_once
+from repro.kernels.gpp import pallas_gpp
+# jitted_variant / size_of_inputs moved to kernel_def; re-exported because
+# they are not deprecated (journey + tests use them as the canonical cache)
+from repro.kernels.gpp.kernel_def import jitted_variant, size_of_inputs  # noqa: F401
 
 DEFAULT_VERSION = "v10"
 
-
-@functools.lru_cache(maxsize=None)
-def jitted_variant(version: str):
-    """One jitted callable per pure-JAX variant for the process lifetime
-    (jax.jit at every gpp() call would rebuild the dispatch wrapper and
-    re-hash the pytree structure each time)."""
-    return jax.jit(variants.VARIANTS[version])
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.devices()[0].platform == "tpu"
-    except Exception:
-        return False
-
-
-def size_of_inputs(inputs: Dict) -> problem.GppSize:
-    """Recover the GppSize of a planar input dict (named if it matches a
-    registered size, else 'custom')."""
-    ncouls, ngpown = inputs["wtilde_re"].shape
-    nw, nbands = inputs["wx"].shape
-    for s in problem.SIZES.values():
-        if (s.ncouls, s.ngpown, s.nbands, s.nw) == (ncouls, ngpown, nbands,
-                                                    nw):
-            return s
-    return problem.GppSize("custom", nbands=nbands, ngpown=ngpown,
-                           ncouls=ncouls, nw=nw)
+_DEPRECATION = ("repro.kernels.gpp.ops.gpp is deprecated; use "
+                "repro.kernels.api.dispatch('gpp', inputs, version=...)")
 
 
 def gpp(inputs: Dict, version: str = DEFAULT_VERSION, *,
         interpret: Optional[bool] = None,
         block_config: Optional[pallas_gpp.BlockConfig] = None
         ) -> Tuple[jax.Array, jax.Array]:
-    """Run the GPP kernel. Returns (achtemp, asxtemp), complex64 (nw,)."""
-    if version in variants.VARIANTS:
-        return jitted_variant(version)(inputs)
-    cfg = block_config
-    if cfg is None:
-        if version in pallas_gpp.CONFIGS:
-            cfg = pallas_gpp.CONFIGS[version].clamped(size_of_inputs(inputs))
-        elif version == "v10":
-            from repro.tune import tuner   # deferred: tune is optional here
-            cfg = tuner.best_config(size_of_inputs(inputs))
-        else:
-            raise ValueError(f"unknown GPP version {version!r}")
-    if interpret is None:
-        interpret = not _on_tpu()
-    return pallas_gpp.gpp_pallas(inputs, cfg, interpret=interpret)
+    """Run the GPP kernel. Returns (achtemp, asxtemp), complex64 (nw,).
+    Deprecated: use api.dispatch("gpp", ...)."""
+    warn_once(_DEPRECATION)
+    return api.dispatch("gpp", inputs, version=version, config=block_config,
+                        interpret=interpret)
 
 
 gpp_v8 = functools.partial(gpp, version="v8")

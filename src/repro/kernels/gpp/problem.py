@@ -59,6 +59,10 @@ class GppSize:
     def inner_iters(self) -> int:
         return self.nbands * self.ngpown * self.ncouls * self.nw
 
+    def key_dims(self) -> str:
+        """ProblemKey protocol (repro.kernels.api): the tune-cache dims."""
+        return f"{self.ncouls}x{self.ngpown}x{self.nbands}x{self.nw}"
+
     # analytic per-inner-iteration FLOP count for the branchless (v2+) form,
     # counted on the planar-f32 arithmetic (see variants.py):
     #   wdiff sub 2; |wdiff|^2 3; rcp 1 (div counts 1); delw 2 cmul-ish 8;

@@ -1,0 +1,27 @@
+"""Public ssm op layer (new with the kernel registry — the scan previously
+had no op surface at all; consumers reached into ssm_scan.py and hand-picked
+blk_c).
+
+    from repro.kernels.ssm import ops
+    y, hT = ops.ssm_scan(x, dt, bmat, cmat, a_log, d, h0)
+
+Thin wrapper over `repro.kernels.api.dispatch("ssm", ...)`: version=None
+runs the Pallas kernel under the repro.tune cached blk_c for this
+(B, T, C, N); version="ref"/"chunked" run the XLA forms.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.kernels import api
+
+
+def ssm_scan(x, dt, bmat, cmat, a_log, d, h0, *,
+             version: Optional[str] = None, config=None,
+             interpret: Optional[bool] = None):
+    """Same contract as models/mamba.ssm_scan: x, dt: (B,T,C);
+    bmat/cmat: (B,T,N); a_log: (C,N); d: (C,); h0: (B,C,N).
+    Returns (y (B,T,C) f32, hT (B,C,N) f32)."""
+    return api.dispatch("ssm", x, dt, bmat, cmat, a_log, d, h0,
+                        version=version, config=config, interpret=interpret)

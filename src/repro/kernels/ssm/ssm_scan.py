@@ -18,10 +18,13 @@ tests/test_ssm_kernel.py across shape sweeps.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro import backend
 
 
 def _kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, h0_ref,
@@ -45,10 +48,12 @@ def _kernel(x_ref, dt_ref, b_ref, c_ref, alog_ref, d_ref, h0_ref,
 
 
 def ssm_scan_pallas(x, dt, bmat, cmat, a_log, d, h0, *, blk_c: int = 128,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """Same contract as models/mamba.ssm_scan:
     x, dt: (B,T,C); bmat/cmat: (B,T,N); a_log: (C,N); d: (C,);
-    h0: (B,C,N). Returns (y (B,T,C) f32, hT (B,C,N) f32)."""
+    h0: (B,C,N). Returns (y (B,T,C) f32, hT (B,C,N) f32).
+    interpret=None defers to repro.backend (REPRO_INTERPRET override)."""
+    interpret = backend.resolve_interpret(interpret)
     b, t, c = x.shape
     n = a_log.shape[1]
     blk_c = min(blk_c, c)

@@ -199,10 +199,16 @@ def flash_attention_spmd(q, k, v, ctx: Optional[DistCtx], *,
     see LOCAL shards — lowering it through SPMD auto-sharding makes XLA
     all-gather the operands per grid step (measured: PB-scale collectives).
     Heads shard over `model` when divisible, batch over the dp axes;
-    otherwise that dim replicates (same fallback as the sharding engine)."""
-    from repro.kernels.flash.ops import flash_attention
+    otherwise that dim replicates (same fallback as the sharding engine).
+
+    Dispatches through the kernel registry, so the (blk_q, blk_kv) come
+    from the repro.tune cache per local shard size instead of the old
+    frozen 256/256. Tuning here is model-only: this runs at trace time
+    inside jit/shard_map, where a measurement pass (timed kernel
+    executions on synthetic inputs) would stall every first compile of a
+    new shape."""
     if ctx is None or ctx.mesh is None:
-        return flash_attention(q, k, v, causal=causal)
+        return _dispatch_flash(q, k, v, causal)
     mesh = ctx.mesh
     b, s, h, hd = q.shape
     kvh = k.shape[2]
@@ -215,7 +221,21 @@ def flash_attention_spmd(q, k, v, ctx: Optional[DistCtx], *,
     qs = P(bspec, None, hspec, None)
 
     fn = jax.shard_map(
-        lambda q_, k_, v_: flash_attention(q_, k_, v_, causal=causal),
+        lambda q_, k_, v_: _dispatch_flash(q_, k_, v_, causal),
         mesh=mesh, in_specs=(qs, qs, qs), out_specs=qs,
         axis_names=frozenset(mesh.axis_names), check_vma=False)
     return fn(q, k, v)
+
+
+def _dispatch_flash(q, k, v, causal):
+    """Registry dispatch with a model-only tuned config (no timing pass at
+    trace time); shapes the tune menu can't tile fall back to config=None,
+    which dispatch resolves to the divisor-clamped static config."""
+    from repro.kernels import api
+    from repro.tune import tuner
+    key = api.get_kernel("flash").problem_key(q, k, v, causal=causal)
+    try:
+        cfg = tuner.tune_kernel("flash", key, measure_mode=False).config
+    except ValueError:            # empty config space at this shape
+        cfg = None
+    return api.dispatch("flash", q, k, v, causal=causal, config=cfg)

@@ -1,15 +1,22 @@
-"""Model-guided, measurement-verified autotuning for the GPP Pallas kernel.
+"""Model-guided, measurement-verified autotuning for every kernel in the
+registry (`repro.kernels.api`).
 
 The paper's v8 is a hand-run block-size sweep frozen into one static config;
-this package re-runs that sweep per (problem size, backend): `space`
-enumerates divisibility- and VMEM-feasible BlockConfigs, `tuner` ranks them
-with the analytic roofline model (core.vpu_model), optionally times the
-top-K with the real harness in `measure`, and persists the winner to a JSON
-cache so `ops.gpp(..., version="v10")` dispatches to a tuned config
-automatically. See DESIGN.md §Autotuner.
+this package re-runs that sweep per (kernel, problem size, backend, kernel
+version): each registered `Kernel` supplies its feasible config space and
+analytic roofline model, `tuner` ranks the space with that model, optionally
+times the top-K with the real harness in `measure`, and persists the winner
+to a JSON cache keyed `(kernel, ProblemKey, backend, version)` so
+`api.dispatch(...)` hits a tuned config automatically — gpp's `(blk_ig,
+blk_igp, blk_band)`, flash attention's `(blk_q, blk_kv)`, and the ssm
+scan's `blk_c` all flow through the same model-then-measure path.
+`space` holds the GPP candidate generator (other kernels enumerate theirs
+in their kernel_def). See DESIGN.md §Autotuner / §Kernel registry.
 """
 
 from repro.tune.space import candidates
-from repro.tune.tuner import TunedConfig, best_config, rank, tune
+from repro.tune.tuner import (TunedConfig, best_config, cache_key_for, rank,
+                              rank_kernel, tune, tune_kernel)
 
-__all__ = ["candidates", "rank", "tune", "best_config", "TunedConfig"]
+__all__ = ["candidates", "rank", "rank_kernel", "tune", "tune_kernel",
+           "best_config", "cache_key_for", "TunedConfig"]

@@ -5,35 +5,40 @@ Median-of-reps wall clock around the compiled (or interpreted) kernel with
 warmup calls first (compile/trace cost excluded), then `reps` timed calls,
 report the median (robust to scheduler noise).
 
-On CPU the Pallas kernel only runs in interpret mode, which is orders of
+`time_callable` is the generic harness the registry-wide tuner uses (any
+kernel's `run` closure); `time_config` is the original GPP-specific entry,
+kept for direct callers.
+
+On CPU the Pallas kernels only run in interpret mode, which is orders of
 magnitude slower than a real TPU but preserves the *relative* cost of
-configs at small sizes; `tuner.tune` only enables measurement on CPU below
-`MEASURE_MAX_ITERS` so the pass stays cheap.
+configs at small sizes; `tuner.tune_kernel` only enables measurement on CPU
+when the kernel's `measure_ok` gate says the problem is small enough (for
+gpp: below `MEASURE_MAX_ITERS`) so the pass stays cheap.
 """
 
 from __future__ import annotations
 
 import statistics
 import time
-from typing import Dict
+from typing import Callable, Dict
 
 import jax
 
 from repro.kernels.gpp import pallas_gpp
 
 # largest size.inner_iters the CPU (interpret-mode) measurement pass will
-# time; beyond this the model-only ranking is used.
+# time for the GPP kernel; beyond this the model-only ranking is used.
 MEASURE_MAX_ITERS = 1 << 17
 
 
-def time_config(inputs: Dict, cfg: pallas_gpp.BlockConfig, *,
-                interpret: bool, warmup: int = 1, reps: int = 3) -> float:
-    """Median seconds per call of the Pallas kernel under `cfg`.
+def time_callable(fn: Callable[[], object], *, warmup: int = 1,
+                  reps: int = 3) -> float:
+    """Median seconds per call of `fn` (fenced with block_until_ready).
 
     warmup=0 is honored (callers measuring cold-start/compile cost want the
     first timed call to include it); only negative values are clamped."""
     def call():
-        out = pallas_gpp.gpp_pallas(inputs, cfg, interpret=interpret)
+        out = fn()
         jax.block_until_ready(out)
         return out
 
@@ -45,3 +50,11 @@ def time_config(inputs: Dict, cfg: pallas_gpp.BlockConfig, *,
         call()
         times.append(time.perf_counter() - t0)
     return statistics.median(times)
+
+
+def time_config(inputs: Dict, cfg: pallas_gpp.BlockConfig, *,
+                interpret: bool, warmup: int = 1, reps: int = 3) -> float:
+    """Median seconds per call of the GPP Pallas kernel under `cfg`."""
+    return time_callable(
+        lambda: pallas_gpp.gpp_pallas(inputs, cfg, interpret=interpret),
+        warmup=warmup, reps=reps)

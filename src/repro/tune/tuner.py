@@ -1,17 +1,24 @@
-"""Model-then-measure block-size tuner with a persisted JSON cache.
+"""Model-then-measure config tuner with a persisted JSON cache, generalized
+over the kernel registry (`repro.kernels.api`).
 
 Flow (DESIGN.md §Autotuner):
-  1. `rank(size)` — enumerate the feasible space (tune.space) and sort by
-     the analytic roofline model (core.vpu_model.pallas_step_s): compute
-     passes + per-instance grid overhead vs HBM traffic, max() of the two.
-  2. `tune(size)` — optionally time the model's top-K with the real harness
-     (tune.measure) and let measurement override the model's order. On CPU
-     the kernel runs in interpret mode, so measurement is only attempted
-     below measure.MEASURE_MAX_ITERS; on TPU it always runs (compiled).
-  3. The winner is persisted to `<cache_dir>/gpp_tune.json`, keyed by
-     (problem dims, backend, kernel version), so repeated
-     `ops.gpp(..., version="v10")` calls dispatch straight to the tuned
-     config. Cache dir: $REPRO_TUNE_CACHE, else ./runs/tune.
+  1. `rank_kernel(kernel, key)` — enumerate the kernel's feasible config
+     space and sort by its analytic roofline-model hook (for gpp that is
+     core.vpu_model.pallas_step_s: compute passes + per-instance grid
+     overhead vs HBM traffic, max() of the two).
+  2. `tune_kernel(kernel, key)` — optionally time the model's top-K with
+     the real harness (tune.measure) and let measurement override the
+     model's order. On CPU the kernels run in interpret mode, so the
+     timing pass only runs when the kernel's `measure_ok(key)` says the
+     problem is small enough; on TPU it always runs (compiled).
+  3. The winner is persisted to `<cache_dir>/kernel_tune.json`, keyed by
+     `(kernel, ProblemKey dims, backend, version)`, so repeated
+     dispatches go straight to the tuned config. Cache dir:
+     $REPRO_TUNE_CACHE, else ./runs/tune.
+
+`tune`/`rank`/`best_config`/`cache_key` keep their original GPP-only
+signatures as wrappers over the generic flow — existing callers and the
+`ops.gpp(..., version="v10")` shim are unchanged.
 
 An in-process memo sits in front of the JSON file; `clear_memo()` resets it
 (tests point $REPRO_TUNE_CACHE at a tmp dir).
@@ -23,46 +30,56 @@ import dataclasses
 import json
 import os
 import tempfile
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
-import jax
-
-from repro.core import vpu_model
+from repro import backend as backend_lib
 from repro.kernels.gpp import pallas_gpp, problem
-from repro.tune import measure, space
+from repro.tune import measure
 
 CACHE_ENV = "REPRO_TUNE_CACHE"
-CACHE_FILE = "gpp_tune.json"
+CACHE_FILE = "kernel_tune.json"
 DEFAULT_VERSION = "v10"
 
-_MEMO: Dict[str, "TunedConfig"] = {}
+_MEMO: Dict[Tuple[str, str], "TunedConfig"] = {}
 
 
 @dataclasses.dataclass(frozen=True)
 class TunedConfig:
-    config: pallas_gpp.BlockConfig
+    config: Any                      # kernel-specific (BlockConfig, ...)
     modeled_s: float
     measured_s: Optional[float]      # None when the measurement pass skipped
     key: str
     source: str                      # "model" | "measured" | "cache"
+    kernel: str = "gpp"
 
     def to_json(self) -> Dict:
-        return {"config": dataclasses.asdict(self.config),
+        from repro.kernels import api
+        return {"kernel": self.kernel,
+                "config": api.get_kernel(self.kernel).config_to_json(
+                    self.config),
                 "modeled_s": self.modeled_s,
                 "measured_s": self.measured_s,
                 "key": self.key, "source": self.source}
 
     @staticmethod
     def from_json(d: Dict) -> "TunedConfig":
-        return TunedConfig(config=pallas_gpp.BlockConfig(**d["config"]),
-                           modeled_s=d["modeled_s"],
-                           measured_s=d.get("measured_s"),
-                           key=d["key"], source="cache")
+        from repro.kernels import api
+        kernel = d.get("kernel", "gpp")
+        return TunedConfig(
+            config=api.get_kernel(kernel).config_from_json(d["config"]),
+            modeled_s=d["modeled_s"], measured_s=d.get("measured_s"),
+            key=d["key"], source="cache", kernel=kernel)
+
+
+def cache_key_for(kernel: str, key, backend: str, version: str) -> str:
+    """The generalized cache key: (kernel, ProblemKey dims, backend,
+    version)."""
+    return f"{kernel}|{key.key_dims()}|{backend}|{version}"
 
 
 def cache_key(size: problem.GppSize, backend: str, version: str) -> str:
-    return (f"{size.ncouls}x{size.ngpown}x{size.nbands}x{size.nw}"
-            f"|{backend}|{version}")
+    """Legacy GPP-only form of cache_key_for."""
+    return cache_key_for("gpp", size, backend, version)
 
 
 def _cache_dir() -> str:
@@ -96,83 +113,98 @@ def clear_memo() -> None:
     _MEMO.clear()
 
 
-def rank(size: problem.GppSize, *, version: str = DEFAULT_VERSION
-         ) -> List[Tuple[pallas_gpp.BlockConfig, float]]:
-    """Feasible configs sorted by modeled step time (deterministic
-    tie-break: bigger blocks first — fewer grid instances)."""
-    fused = version not in ("v6", "v7", "v8")
-    mix = vpu_model.OP_MIX.get(version, vpu_model.OP_MIX["v9"])
-    scored = [(cfg, vpu_model.pallas_step_s(size, cfg, mix))
-              for cfg in space.candidates(size, fused=fused)]
-    scored.sort(key=lambda ct: (ct[1], -ct[0].blk_band, -ct[0].blk_ig,
-                                -ct[0].blk_igp))
+def rank_kernel(kernel: str, key, *, version: Optional[str] = None
+                ) -> List[Tuple[Any, float]]:
+    """Feasible configs for (kernel, key) sorted by the kernel's modeled
+    step time (deterministic tie-break via Kernel.tie_break)."""
+    from repro.kernels import api
+    k = api.get_kernel(kernel)
+    version = version or k.default_version
+    scored = [(cfg, k.model_step_s(key, cfg, version))
+              for cfg in k.config_space(key, version)]
+    scored.sort(key=lambda ct: (ct[1],) + tuple(k.tie_break(ct[0])))
     return scored
 
 
-def _should_measure(size: problem.GppSize, backend: str) -> bool:
-    if backend == "tpu":
-        return True
-    return size.inner_iters <= measure.MEASURE_MAX_ITERS
+def rank(size: problem.GppSize, *, version: str = DEFAULT_VERSION
+         ) -> List[Tuple[pallas_gpp.BlockConfig, float]]:
+    """Legacy GPP-only form of rank_kernel."""
+    return rank_kernel("gpp", size, version=version)
 
 
-def tune(size: problem.GppSize, *, version: str = DEFAULT_VERSION,
-         backend: Optional[str] = None, measure_mode: Optional[bool] = None,
-         top_k: int = 3, warmup: int = 1, reps: int = 3,
-         cache_dir: Optional[str] = None, use_cache: bool = True,
-         seed: int = 0) -> TunedConfig:
-    """Pick the best BlockConfig for (size, backend, version).
+def tune_kernel(kernel: str, key, *, version: Optional[str] = None,
+                backend: Optional[str] = None,
+                measure_mode: Optional[bool] = None,
+                top_k: int = 3, warmup: int = 1, reps: int = 3,
+                cache_dir: Optional[str] = None, use_cache: bool = True,
+                seed: int = 0) -> TunedConfig:
+    """Pick the best config for (kernel, key, backend, version).
 
     measure_mode: True forces the timing pass, False forces model-only,
-    None (default) measures iff the backend is TPU or the size is small
-    enough for CPU interpret timing. The result is memoized in-process and
-    persisted to the JSON cache (use_cache=False bypasses both)."""
-    backend = backend or jax.default_backend()
-    key = cache_key(size, backend, version)
+    None (default) measures iff the backend is TPU or the kernel's
+    measure_ok(key) allows CPU interpret timing. The result is memoized
+    in-process and persisted to the JSON cache (use_cache=False bypasses
+    both)."""
+    from repro.kernels import api
+    k = api.get_kernel(kernel)
+    version = version or k.default_version
+    backend = backend or backend_lib.backend_name()
+    ckey = cache_key_for(kernel, key, backend, version)
     # memo per cache *file*, not just per key — two explicit cache_dirs must
     # not see each other's results
-    memo_key = (os.path.abspath(_cache_path(cache_dir)), key)
+    memo_key = (os.path.abspath(_cache_path(cache_dir)), ckey)
 
     if use_cache:
         if memo_key in _MEMO:
             return _MEMO[memo_key]
         disk = _load_cache(cache_dir)
-        if key in disk:
+        if ckey in disk:
             try:
-                tc = TunedConfig.from_json(disk[key])
+                tc = TunedConfig.from_json(disk[ckey])
             except (KeyError, TypeError):
-                pass    # schema-stale entry (e.g. BlockConfig field rename)
+                pass    # schema-stale entry (e.g. config field rename)
             else:       # -> fall through and re-tune
                 _MEMO[memo_key] = tc
                 return tc
 
-    ranked = rank(size, version=version)
+    ranked = rank_kernel(kernel, key, version=version)
     if not ranked:
-        raise ValueError(f"no feasible BlockConfig for {size}")
+        raise ValueError(f"no feasible {kernel} config for {key}")
 
     do_measure = (measure_mode if measure_mode is not None
-                  else _should_measure(size, backend))
+                  else backend == "tpu" or k.measure_ok(key))
     best_cfg, best_model_s = ranked[0]
     measured_s = None
     if do_measure and top_k > 0:
-        inputs = problem.make_inputs(size, seed=seed)
+        args, kwargs = k.make_example(key, seed=seed)
         interpret = backend != "tpu"
         timed = []
         for cfg, model_s in ranked[:top_k]:
-            t = measure.time_config(inputs, cfg, interpret=interpret,
-                                    warmup=warmup, reps=reps)
+            t = measure.time_callable(
+                lambda cfg=cfg: k.run(*args, version=version, config=cfg,
+                                      interpret=interpret, **kwargs),
+                warmup=warmup, reps=reps)
             timed.append((t, model_s, cfg))
         timed.sort(key=lambda x: x[0])
         measured_s, best_model_s, best_cfg = timed[0]
 
-    tc = TunedConfig(config=dataclasses.replace(best_cfg, name=version),
-                     modeled_s=best_model_s, measured_s=measured_s, key=key,
-                     source="measured" if measured_s is not None else "model")
+    tc = TunedConfig(config=k.finalize_config(best_cfg, version),
+                     modeled_s=best_model_s, measured_s=measured_s,
+                     key=ckey,
+                     source="measured" if measured_s is not None else "model",
+                     kernel=kernel)
     if use_cache:
         _MEMO[memo_key] = tc
         disk = _load_cache(cache_dir)
-        disk[key] = tc.to_json()
+        disk[ckey] = tc.to_json()
         _store_cache(cache_dir, disk)
     return tc
+
+
+def tune(size: problem.GppSize, *, version: str = DEFAULT_VERSION,
+         **kwargs) -> TunedConfig:
+    """Legacy GPP-only form of tune_kernel (same keyword surface)."""
+    return tune_kernel("gpp", size, version=version, **kwargs)
 
 
 def best_config(size: problem.GppSize, **kwargs) -> pallas_gpp.BlockConfig:

@@ -126,12 +126,47 @@ def write_artifact(rows: List[Dict], path: str, *,
     return art
 
 
+class ArtifactError(ValueError):
+    """A BENCH_*.json artifact compare mode can't trust (bad schema, or a
+    hand-edited row breaking the kernel_config provenance contract)."""
+
+
+# every kernel_config must carry full provenance: which kernel + version
+# produced the row, the concrete config, and where it came from
+# (static | model | measured | cache). make_artifact always writes all
+# four; a missing key means the baseline was edited by hand.
+KERNEL_CONFIG_KEYS = ("kernel", "version", "config", "source")
+
+
+def validate_artifact(art: Dict, path: str) -> None:
+    """Raise ArtifactError if any row's kernel_config is malformed —
+    compare mode must fail the gate LEGIBLY on a hand-edited baseline,
+    not with a traceback out of the churn formatter."""
+    for row in art.get("rows", []):
+        name = row.get("name", "<unnamed>")
+        kc = row.get("kernel_config")
+        if kc is None:
+            continue
+        if not isinstance(kc, dict):
+            raise ArtifactError(
+                f"{path}: row {name!r}: kernel_config must be an object "
+                f"with keys {list(KERNEL_CONFIG_KEYS)}, got "
+                f"{type(kc).__name__} ({kc!r}) — hand-edited baseline?")
+        missing = [k for k in KERNEL_CONFIG_KEYS if k not in kc]
+        if missing:
+            raise ArtifactError(
+                f"{path}: row {name!r}: kernel_config is missing "
+                f"provenance key(s) {missing} (needs all of "
+                f"{list(KERNEL_CONFIG_KEYS)}) — hand-edited baseline? "
+                f"Regenerate it with `python -m benchmarks.run --json`.")
+
+
 def load_artifact(path: str) -> Dict:
     with open(path) as fh:
         art = json.load(fh)
     if art.get("schema") != SCHEMA:
-        raise ValueError(f"{path}: unknown schema {art.get('schema')!r} "
-                         f"(expected {SCHEMA})")
+        raise ArtifactError(f"{path}: unknown schema {art.get('schema')!r} "
+                            f"(expected {SCHEMA})")
     return art
 
 
@@ -207,7 +242,16 @@ def compare(old: Dict, new: Dict, *, threshold: float = 0.10,
 def run_compare(old_path: str, new_path: str, *, threshold: float = 0.10,
                 include_wallclock: bool = False, warn_only: bool = False
                 ) -> int:
-    old, new = load_artifact(old_path), load_artifact(new_path)
+    """Exit codes: 0 clean (or --warn-only), 1 regression found, 2 an
+    artifact itself is unusable (unreadable / bad schema / malformed
+    kernel_config provenance) — a clear one-line error, not a traceback."""
+    try:
+        old, new = load_artifact(old_path), load_artifact(new_path)
+        validate_artifact(old, old_path)
+        validate_artifact(new, new_path)
+    except (ArtifactError, OSError, json.JSONDecodeError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     regressions, improvements, notes = compare(
         old, new, threshold=threshold, include_wallclock=include_wallclock)
     for line in notes:

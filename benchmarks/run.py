@@ -222,12 +222,29 @@ def train_step_cpu():
         _csv(f"train_step_{arch}", dt * 1e6, "reduced-config fwd+bwd on CPU")
 
 
+# --serve --mesh tp size (int), set by main() before jax imports so the
+# forced host device count can take effect
+SERVE_MESH = None
+
+
+def _parse_mesh(spec: str) -> int:
+    axis, sep, n = spec.partition("=")
+    if axis != "tp" or not sep or not n.isdigit() or int(n) < 1:
+        raise SystemExit(f"--mesh expects 'tp=N', got {spec!r}")
+    return int(n)
+
+
 def serve():
     """Slot-level continuous-batching stats: a mixed-length workload with
     more requests than slots on a reduced model. decode_steps / prefills /
     new_tokens / occupancy are deterministic (fixed workload, greedy or
     per-request keyed sampling); ttft/queue/tok_per_s are wall clock and
-    therefore informational only (no gate-list metric names)."""
+    therefore informational only (no gate-list metric names).
+
+    With --mesh tp=N the engine serves tensor-parallel over an N-way
+    `model` mesh axis (dist.sharding.serve_specs exact-TP layout) and one
+    extra serve_device_<i> row per device records its occupancy / tok_per_s
+    plus the measured local param/cache shard sizes."""
     import jax
     import numpy as np
 
@@ -235,11 +252,22 @@ def serve():
     from repro.models.registry import build_model
     from repro.serve.engine import Request, ServeEngine
 
-    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+    mesh = None
+    if SERVE_MESH is not None:
+        tp = SERVE_MESH
+        if jax.device_count() < tp:
+            raise SystemExit(
+                f"--mesh tp={tp} needs {tp} devices but jax sees "
+                f"{jax.device_count()} (run.py forces the host platform "
+                "count only when jax is not already initialized)")
+        mesh = jax.make_mesh((tp,), ("model",))
+    # d_model=256 gives 8 heads / d_ff 768: dims an 8-way axis divides
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2,
+                        d_model=(256 if mesh is not None else 64),
                         vocab=128)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    eng = ServeEngine(cfg, params, max_batch=4, cache_len=128)
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=128, mesh=mesh)
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 4 + i % 7),
                     max_new_tokens=(4 if i % 3 else 32),
@@ -260,6 +288,12 @@ def serve():
          f"p95_ttft_ms={np.percentile(ttfts, 95) * 1e3:.1f};"
          f"p50_queue_ms={np.percentile(waits, 50) * 1e3:.1f};"
          f"p95_queue_ms={np.percentile(waits, 95) * 1e3:.1f}")
+    for d in e.get("per_device", []):
+        _csv(f"serve_device_{d['device']}", None,
+             f"occupancy={d['occupancy']:.3f};"
+             f"tok_per_s={d['tok_per_s']:.1f};"
+             f"params_mib={d['params_bytes'] / 2**20:.3f};"
+             f"cache_mib={d['cache_bytes'] / 2**20:.3f}")
 
 
 TABLES = {
@@ -290,6 +324,10 @@ def main() -> None:
                          "(schema: benchmarks/report.py)")
     ap.add_argument("--serve", action="store_true",
                     help="shortcut for --only serve (slot-scheduler stats)")
+    ap.add_argument("--mesh", default=None, metavar="tp=N",
+                    help="with --serve: run the engine tensor-parallel "
+                         "over an N-way model axis (forces N host devices "
+                         "when jax is not yet initialized)")
     args = ap.parse_args()
     if args.serve:
         todo = ["serve"]
@@ -302,6 +340,24 @@ def main() -> None:
         unknown = [t for t in todo if t not in TABLES]
         if unknown:
             ap.error(f"unknown tables {unknown}; choose from {list(TABLES)}")
+    if args.mesh:
+        if todo != ["serve"]:
+            # a forced host device count would silently skew every other
+            # table's wall-clock rows while the mesh itself went unused
+            ap.error("--mesh only applies to the serve table "
+                     "(use --serve or --only serve)")
+        import sys as _sys
+        tp = _parse_mesh(args.mesh)
+        if "jax" not in _sys.modules:
+            # must land before the first jax import; harmless off-CPU
+            # (the flag only affects the host platform)
+            flags = os.environ.get("XLA_FLAGS", "")
+            if "xla_force_host_platform_device_count" not in flags:
+                os.environ["XLA_FLAGS"] = (
+                    f"{flags} --xla_force_host_platform_device_count={tp}"
+                ).strip()
+        global SERVE_MESH
+        SERVE_MESH = tp
     print("name,us_per_call,derived")
     for name in todo:
         TABLES[name]()

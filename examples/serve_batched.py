@@ -4,6 +4,12 @@ mid-flight — with greedy + temperature sampling and per-request
 latency/throughput stats.
 
     PYTHONPATH=src python examples/serve_batched.py --requests 8 --batch 4
+
+Tensor-parallel over N forced host devices (docs/serving.md §Sharded
+serving; outputs are bit-exact vs --tp 1):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+        PYTHONPATH=src python examples/serve_batched.py --tp 4
 """
 
 import argparse
@@ -23,13 +29,17 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--tp", type=int, default=1,
+                    help="serve tensor-parallel over a tp-way model axis "
+                         "(needs >= tp jax devices)")
     args = ap.parse_args()
 
     cfg = reduce_config(get_config("phi4-mini-3.8b"), layers=4, d_model=256,
                         vocab=1024)
     model = build_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
-    engine = ServeEngine(cfg, params, max_batch=args.batch)
+    mesh = (jax.make_mesh((args.tp,), ("model",)) if args.tp > 1 else None)
+    engine = ServeEngine(cfg, params, max_batch=args.batch, mesh=mesh)
 
     rng = np.random.default_rng(0)
     reqs = [Request(rid=i,
@@ -43,8 +53,13 @@ def main():
     dt = time.perf_counter() - t0
     e = stats["engine"]
     total = sum(len(v) for v in out.values())
+    tp = f", tp={args.tp}" if args.tp > 1 else ""
     print(f"served {len(reqs)} requests / {total} tokens "
-          f"in {dt:.2f}s ({total/dt:.1f} tok/s, batch={args.batch})")
+          f"in {dt:.2f}s ({total/dt:.1f} tok/s, batch={args.batch}{tp})")
+    for d in e.get("per_device", []):
+        print(f"  device {d['device']}: params "
+              f"{d['params_bytes']/2**20:.2f} MiB, cache "
+              f"{d['cache_bytes']/2**20:.2f} MiB")
     print(f"  decode_steps={e['decode_steps']} prefills={e['prefills']} "
           f"occupancy={e['occupancy']:.2f} "
           f"mean_ttft={e['mean_ttft_s']*1e3:.0f}ms "

@@ -2,7 +2,24 @@
 single-kernel roofline study (8 Steps to 3.7 TFLOP/s, arXiv:2008.11326).
 
 `import repro` is the documented entry point; the public surface is lazy
-(nothing heavy imports until first attribute access):
+(nothing heavy imports until first attribute access). Every name below
+carries a full docstring with a runnable example at its definition —
+`help(repro.dispatch)` etc. resolves it:
+
+    dispatch(name, *args, version=, config=, problem_key=)
+        Run a registered kernel; config resolves from the tune cache.
+    get_kernel(name) / list_kernels()
+        The Kernel descriptor registry (docs/kernels.md).
+    build_model(cfg)
+        Config -> Model bundle: init/loss/prefill/decode/prefill_into_slot
+        + the logical-axis metadata the sharding engine consumes.
+    ServeEngine(cfg, params, max_batch=, cache_len=, mesh=) / Request
+        Slot-level continuous-batching server; pass mesh= to serve
+        tensor-parallel over a repro.dist mesh (docs/serving.md).
+    run_journey(size)
+        The paper's Table I, v0-v10, on the modeled v5e roofline.
+    tune_kernel(kernel, key)
+        Model-then-measure autotuner; winners persist to the JSON cache.
 
     import repro
     repro.list_kernels()                       # ['flash', 'gpp', 'ssm']

@@ -193,6 +193,20 @@ NOTES = {
 
 def run_journey(size_name: str = "si214", *, measure_cpu: bool = True,
                 verbose: bool = True) -> List[JourneyRow]:
+    """Replay the paper's v0–v10 optimization journey (Table I) at one
+    problem size ("tiny" / "bench" / "si214" / "si510"): every version is
+    verified against the numpy oracle at TINY size, modeled on the v5e
+    roofline, and (measure_cpu=True) wall-clocked at BENCH size. Returns
+    one JourneyRow per version with the modeled TFLOP/s and roofline
+    terms; the README journey table and `benchmarks/run.py gpp_journey`
+    are formatted from these rows.
+
+    Example::
+
+        import repro
+        rows = repro.run_journey("si214", measure_cpu=False, verbose=False)
+        rows[-1].version, rows[-1].modeled_tflops     # ('v10', 4.09...)
+    """
     size = problem.SIZES[size_name]
     inputs_bench = problem.make_inputs(problem.BENCH)
     inputs_tiny = problem.make_inputs(problem.TINY)

@@ -58,6 +58,13 @@ class ShardingPlan:
     fsdp: bool = False
     kv_seq_shard: bool = False
     ep_data: bool = False
+    # Params take the model axis ONLY on their last (output-feature) dim —
+    # column-parallel everywhere, no row-parallel weights. Every cross-
+    # device combine is then a concatenation (all-gather), never a psum,
+    # so floating-point reductions keep their single-device association
+    # order and sharded execution is BIT-EXACT by construction (the
+    # serving plan's contract; see serve_specs / layers.exact_tp_scope).
+    tp_out_dims_only: bool = False
 
     @property
     def tp_axis(self) -> Optional[str]:
@@ -119,8 +126,14 @@ def spec_for(plan: ShardingPlan, axes: Sequence[Optional[str]],
         if not is_param and plan.kv_seq_shard:
             candidates += [i for i in reversed(range(n))
                            if axes[i] == "kv_seq"]
-        candidates += [i for i in reversed(range(n))
-                       if axes[i] in _TP_NAMES]
+        if is_param and plan.tp_out_dims_only:
+            # column-parallel only: a weight may shard its LAST dim (the
+            # output features); contraction dims replicate (exact-TP)
+            if n and axes[n - 1] in _TP_NAMES:
+                candidates.append(n - 1)
+        else:
+            candidates += [i for i in reversed(range(n))
+                           if axes[i] in _TP_NAMES]
         for i in candidates:
             if fits(i, (tp,)):
                 take(i, (tp,))
@@ -202,6 +215,63 @@ def cache_shardings(plan: ShardingPlan, cache_axes: PyTree,
             plan.mesh, spec_for(plan, axes, ab_node.shape, is_param=False))
 
     return walk(cache_axes, abstract_cache)
+
+
+@dataclasses.dataclass
+class ServeShardings:
+    """How a ServeEngine lays its state out on a serving mesh.
+
+    params / cache are NamedSharding trees matching the model's param tree
+    and the slot scheduler's batched decode cache (whose "pos" is a (B,)
+    per-slot vector). replicated is the P() sharding for everything the
+    host-side scheduler owns (tokens, active masks, logits) — scheduler
+    state is replicated so the FIFO slot loop stays device-count-agnostic.
+    """
+    plan: ShardingPlan
+    params: PyTree
+    cache: PyTree
+    replicated: NamedSharding
+
+
+def serve_specs(cfg, mesh, *, max_batch: int, cache_len: int,
+                model=None) -> ServeShardings:
+    """Sharding layout for tensor-parallel serving of `cfg` over `mesh`.
+
+    The plan is TP-only (no dp axes) and **exact-TP** (tp_out_dims_only):
+    the `model` mesh axis shards weights column-parallel on their output
+    dims (heads / d_ff / vocab) and the per-slot K/V cache head-wise via
+    its "kv_heads" logical axis; contraction dims never shard, and the
+    row-parallel matmuls all-gather their activation under
+    `layers.exact_tp_scope` instead of psum-combining partials. Every
+    cross-device combine is therefore a concatenation of values computed
+    whole on one device — no float reduction changes association order —
+    which is what makes sharded serving BIT-EXACT vs the single-device
+    engine (tests/test_serve_sharded.py pins it token-for-token), at the
+    cost of computing the down-projections redundantly per device.
+    Everything the scheduler mutates on the host (per-slot pos vector,
+    sampled tokens, logits) replicates, so slot admission order and
+    refill behaviour are identical on 1 device and N.
+
+    Dims the mesh does not divide (e.g. 2 kv heads on an 8-way axis) fall
+    back to replication per the spec_for invariants; the engine still runs,
+    just without that dim's shard savings.
+
+    model: optionally the already-built Model for cfg (ServeEngine passes
+    its own), saving a second build here.
+    """
+    if model is None:
+        from repro.models.registry import build_model   # lazy: models imports stay optional here
+        model = build_model(cfg)
+    plan = ShardingPlan(mesh=mesh, dp_axes=(), tp_out_dims_only=True)
+    params = params_shardings(plan, model.param_axes,
+                              model.abstract_params())
+    cache = cache_shardings(plan, model.cache_axes(),
+                            model.init_cache(max_batch, cache_len,
+                                             abstract=True))
+    # the slot scheduler's per-row write position: host-owned, replicated
+    cache["pos"] = NamedSharding(mesh, P())
+    return ServeShardings(plan=plan, params=params, cache=cache,
+                          replicated=NamedSharding(mesh, P()))
 
 
 def batch_shardings(plan: ShardingPlan, batch: PyTree) -> PyTree:

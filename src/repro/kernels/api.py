@@ -162,6 +162,18 @@ def _ensure_builtins() -> None:
 
 
 def get_kernel(name: str) -> Kernel:
+    """Look up a registered Kernel descriptor by name — the object that
+    knows a family's versions, problem keys, config space, and roofline
+    model (docs/kernels.md documents the full protocol). Raises KeyError
+    listing what IS registered for an unknown name.
+
+    Example::
+
+        import repro
+        gpp = repro.get_kernel("gpp")
+        gpp.versions            # ('v0', ..., 'v10')
+        gpp.default_version     # 'v10'
+    """
     _ensure_builtins()
     try:
         return _REGISTRY[name]
@@ -171,26 +183,52 @@ def get_kernel(name: str) -> Kernel:
 
 
 def list_kernels() -> List[str]:
+    """Sorted names of every registered kernel family. Importing this
+    module registers the builtins lazily, so the list is complete without
+    importing the kernel packages yourself.
+
+    Example::
+
+        import repro
+        repro.list_kernels()    # ['flash', 'gpp', 'ssm']
+    """
     _ensure_builtins()
     return sorted(_REGISTRY)
 
 
 def dispatch(name: str, *args, version: Optional[str] = None,
              config: Any = None, interpret: Optional[bool] = None,
-             **kwargs) -> Any:
-    """Run kernel `name` on `args`. version=None uses the kernel's default;
-    config=None resolves per version — the frozen static config (clamped)
-    for static versions, the repro.tune cached winner for tunable ones.
-    interpret=None defers to repro.backend (REPRO_INTERPRET override).
-    Extra kwargs are the kernel's own (e.g. flash's causal=); a name the
-    kernel doesn't accept raises TypeError rather than being swallowed."""
+             problem_key: Any = None, **kwargs) -> Any:
+    """Run kernel `name` on `args` — the one public entry point for every
+    registered kernel family.
+
+    version=None uses the kernel's default; config=None resolves per
+    version — the frozen static config (clamped) for static versions, the
+    repro.tune cached winner for tunable ones. interpret=None defers to
+    repro.backend (REPRO_INTERPRET override). Extra kwargs are the
+    kernel's own (e.g. flash's causal=); a name the kernel doesn't accept
+    raises TypeError rather than being swallowed.
+
+    problem_key: optional pre-built ProblemKey overriding the one derived
+    from args — SPMD callers use it to tune for the LOCAL shard of a
+    problem whose operands are still global at trace time (e.g. the
+    sharded ServeEngine keys the ssm scan on channels/tp so cached block
+    configs match what each device actually executes).
+
+    Example::
+
+        import repro
+        from repro.kernels.gpp import problem
+        ach, asx = repro.dispatch("gpp", problem.make_inputs(problem.TINY))
+    """
     k = get_kernel(name)
     version = version or k.default_version
     if version not in k.versions:
         raise ValueError(f"unknown {k.name} version {version!r}; "
                          f"have {list(k.versions)}")
     if config is None:
-        key = k.problem_key(*args, **kwargs)
+        key = problem_key if problem_key is not None \
+            else k.problem_key(*args, **kwargs)
         if version in k.tunable and k.config_space(key, version):
             from repro.tune import tuner    # deferred: tune is optional here
             config = tuner.tune_kernel(k.name, key, version=version).config

@@ -19,9 +19,15 @@ from repro.kernels import api
 
 def ssm_scan(x, dt, bmat, cmat, a_log, d, h0, *,
              version: Optional[str] = None, config=None,
-             interpret: Optional[bool] = None):
+             interpret: Optional[bool] = None, problem_key=None):
     """Same contract as models/mamba.ssm_scan: x, dt: (B,T,C);
     bmat/cmat: (B,T,N); a_log: (C,N); d: (C,); h0: (B,C,N).
-    Returns (y (B,T,C) f32, hT (B,C,N) f32)."""
+    Returns (y (B,T,C) f32, hT (B,C,N) f32).
+
+    problem_key: optional SsmKey overriding the shape-derived one — SPMD
+    callers (models/transformer.mamba_path under a TP mesh) key the tune
+    cache on the per-shard channel count so blk_c matches the local slab
+    each device runs."""
     return api.dispatch("ssm", x, dt, bmat, cmat, a_log, d, h0,
-                        version=version, config=config, interpret=interpret)
+                        version=version, config=config, interpret=interpret,
+                        problem_key=problem_key)

@@ -23,7 +23,6 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from typing import Optional
 from repro.models.layers import PARAM_DTYPE, DistCtx
 
 NEG_INF = -1e30
@@ -203,10 +202,13 @@ def flash_attention_spmd(q, k, v, ctx: Optional[DistCtx], *,
 
     Dispatches through the kernel registry, so the (blk_q, blk_kv) come
     from the repro.tune cache per local shard size instead of the old
-    frozen 256/256. Tuning here is model-only: this runs at trace time
-    inside jit/shard_map, where a measurement pass (timed kernel
-    executions on synthetic inputs) would stall every first compile of a
-    new shape."""
+    frozen 256/256: _dispatch_flash runs INSIDE shard_map, where q/k/v are
+    the per-device shards, so the FlashKey it builds carries the per-shard
+    head counts (h/tp when the mesh divides them) — the same local-keying
+    contract the ssm registry path gets via DistCtx.tp_shards. Tuning here
+    is model-only: this runs at trace time inside jit/shard_map, where a
+    measurement pass (timed kernel executions on synthetic inputs) would
+    stall every first compile of a new shape."""
     if ctx is None or ctx.mesh is None:
         return _dispatch_flash(q, k, v, causal)
     mesh = ctx.mesh

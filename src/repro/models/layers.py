@@ -99,13 +99,59 @@ def matmul(x, w, *, out_dtype=PARAM_DTYPE):
     return y.astype(out_dtype)
 
 
+# --- exact-TP (bit-exact sharded serving) ----------------------------------
+# Trace-time marker set by ServeEngine while tracing its sharded steps
+# (dist.sharding.serve_specs plans). Inside the scope the row-parallel
+# matmuls all-gather their activation back to replicated BEFORE
+# contracting, instead of letting GSPMD psum per-shard partials: with the
+# serve plan's column-parallel-only weights, every float reduction then
+# runs in single-device association order and the sharded engine is
+# bit-exact vs the unsharded one (the psum's shard-order reduction is the
+# one thing that breaks that, by ~1 bf16 ulp — enough to flip an argmax).
+_EXACT_TP_MESH = None
+
+
+class exact_tp_scope:
+    """Context manager marking a trace as exact-TP over `mesh` (None is a
+    no-op scope, so callers can use it unconditionally)."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+
+    def __enter__(self):
+        global _EXACT_TP_MESH
+        self._prev = _EXACT_TP_MESH
+        _EXACT_TP_MESH = self.mesh
+        return self
+
+    def __exit__(self, *exc):
+        global _EXACT_TP_MESH
+        _EXACT_TP_MESH = self._prev
+        return False
+
+
+def gather_exact_tp(x):
+    """All-gather x to replicated when tracing under exact_tp_scope (the
+    pre-contraction gather of the exact-TP combine); identity otherwise."""
+    if _EXACT_TP_MESH is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_EXACT_TP_MESH, PartitionSpec()))
+
+
 def matmul_rp(x, w):
     """Row-parallel projection (contracting dim sharded over `model`): emit
     bf16 so the cross-shard psum XLA inserts moves HALF the bytes (the
     Megatron bf16-allreduce trick; local MXU accumulation is still f32 —
     only the cross-chip combine is bf16). Measured in EXPERIMENTS.md §Perf:
     llama4 prefill collective term 51.5 -> 32.9s, qwen2.5-32b train
-    137 -> 88s."""
+    137 -> 88s.
+
+    Under exact_tp_scope (sharded serving) the activation is gathered
+    first and the weight is replicated by plan, so this contraction is
+    computed whole per device — bit-exact, no psum."""
+    x = gather_exact_tp(x)
     y = jax.lax.dot_general(
         x, w, (((x.ndim - 1,), (0,)), ((), ())),
         preferred_element_type=jnp.bfloat16)
@@ -218,3 +264,13 @@ class DistCtx:
         if self.mesh is None:
             return 1
         return self.mesh.shape[self.model_axis]
+
+    def tp_shards(self, *dims: int) -> int:
+        """How many ways the model axis splits dims that are all divisible
+        by it (1 when any isn't — the spec_for replication fallback).
+        Kernel call sites use this to key tuned configs on the LOCAL
+        per-shard problem (dim // tp_shards) instead of the global shape."""
+        tp = self.model_size
+        if tp > 1 and all(d % tp == 0 for d in dims):
+            return tp
+        return 1

@@ -19,7 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import PARAM_DTYPE, einsum, swiglu
+from repro.models.layers import PARAM_DTYPE, einsum, gather_exact_tp, swiglu
 
 
 def router_topk(x, w_router, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
@@ -73,6 +73,9 @@ def moe_ffn(x, params, *, n_experts: int, k: int,
     h = einsum("ecd,edf->ecf", x_e, params["wi"])
     g = einsum("ecd,edf->ecf", x_e, params["wg"])
     h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    # exact-TP serving: h's F dim is column-sharded — gather it so the
+    # down-projection contracts whole per device (no psum; bit-exact)
+    h = gather_exact_tp(h)
     y_e = einsum("ecf,efd->ecd", h, params["wo"])               # (E, C, D)
 
     y_e = y_e.astype(jnp.float32) * gate[..., None]

@@ -175,7 +175,7 @@ def _rwkv_stack(cfg: ModelConfig, layers, x, states, *, decode: bool, remat="non
 # --- hymba -----------------------------------------------------------------
 
 def _hymba_stack(cfg: ModelConfig, layers, x, positions, *, remat,
-                 cache=None, decode=False):
+                 cache=None, decode=False, ctx=None):
     w = cfg.attn_window
 
     def fuse(lp, attn_out, ssm_out):
@@ -188,8 +188,8 @@ def _hymba_stack(cfg: ModelConfig, layers, x, positions, *, remat,
             x = carry
             h = rms_norm(x, lp["ln1"], cfg.norm_eps)
             a, _ = T.attn_block(lp["attn"], h, cfg, positions=positions,
-                                window=w)
-            m, _, _ = T.mamba_path(lp["mamba"], h, cfg)
+                                window=w, ctx=ctx)
+            m, _, _ = T.mamba_path(lp["mamba"], h, cfg, ctx=ctx)
             x = x + fuse(lp, a, m)
             h = rms_norm(x, lp["ln2"], cfg.norm_eps)
             f = swiglu(h, lp["ffn"]["wi"], lp["ffn"]["wg"], lp["ffn"]["wo"])
@@ -205,8 +205,8 @@ def _hymba_stack(cfg: ModelConfig, layers, x, positions, *, remat,
             x = carry
             h = rms_norm(x, lp["ln1"], cfg.norm_eps)
             a, (k, v) = T.attn_block(lp["attn"], h, cfg, positions=positions,
-                                     window=w)
-            m, conv_st, h_st = T.mamba_path(lp["mamba"], h, cfg)
+                                     window=w, ctx=ctx)
+            m, conv_st, h_st = T.mamba_path(lp["mamba"], h, cfg, ctx=ctx)
             x = x + fuse(lp, a, m)
             hh = rms_norm(x, lp["ln2"], cfg.norm_eps)
             f = swiglu(hh, lp["ffn"]["wi"], lp["ffn"]["wg"], lp["ffn"]["wo"])
@@ -229,7 +229,7 @@ def _hymba_stack(cfg: ModelConfig, layers, x, positions, *, remat,
                                           ring=True)
         m, conv_st, h_st = T.mamba_path(lp["mamba"], h, cfg,
                                         conv_state=conv_st, h_state=h_st,
-                                        decode=True)
+                                        decode=True, ctx=ctx)
         x = x + fuse(lp, a, m)
         hh = rms_norm(x, lp["ln2"], cfg.norm_eps)
         f = swiglu(hh, lp["ffn"]["wi"], lp["ffn"]["wg"], lp["ffn"]["wo"])
@@ -415,6 +415,23 @@ def cache_logical_axes(cfg: ModelConfig) -> PyTree:
 # ===========================================================================
 
 def build_model(cfg: ModelConfig) -> Model:
+    """Assemble a `Model` for one config: pure, jit-friendly apply
+    functions (init_params / loss_fn / prefill / decode_step /
+    prefill_into_slot / init_cache) plus the logical-axis metadata the
+    sharding engine consumes (param_axes, cache_axes). One call covers
+    every family — dense / moe / ssm / hybrid / encdec / vlm — selected
+    by cfg.family.
+
+    Example::
+
+        import jax, repro
+        from repro.configs.base import get_config, reduce_config
+        cfg = reduce_config(get_config("qwen2-1.5b"), d_model=64, vocab=128)
+        model = repro.build_model(cfg)
+        params = model.init_params(jax.random.PRNGKey(0))
+        logits, cache = model.prefill(params, {"tokens": jax.numpy.ones(
+            (1, 8), jax.numpy.int32)})
+    """
     param_fn = T.build_param_fn(cfg)
 
     from repro.models.layers import build_params
@@ -477,7 +494,7 @@ def build_model(cfg: ModelConfig) -> Model:
             aux = jnp.float32(0.0)
         elif cfg.family == "hybrid":
             x, _ = _hymba_stack(cfg, params["layers"], x, positions,
-                                remat=cfg.remat)
+                                remat=cfg.remat, ctx=ctx)
             aux = jnp.float32(0.0)
         else:
             raise ValueError(cfg.family)
@@ -615,7 +632,8 @@ def build_model(cfg: ModelConfig) -> Model:
                                    decode=False)
         elif cfg.family == "hybrid":
             x, cache = _hymba_stack(cfg, params["layers"], x, positions,
-                                    remat="none", cache={}, decode=False)
+                                    remat="none", cache={}, decode=False,
+                                    ctx=ctx)
         else:
             raise ValueError(cfg.family)
         return _logits(params, _last(x)), cache
@@ -653,7 +671,8 @@ def build_model(cfg: ModelConfig) -> Model:
                                    decode=True)
         elif cfg.family == "hybrid":
             x, cache = _hymba_stack(cfg, params["layers"], x, None,
-                                    remat="none", cache=cache, decode=True)
+                                    remat="none", cache=cache, decode=True,
+                                    ctx=ctx)
         else:
             raise ValueError(cfg.family)
         return _logits(params, x), cache

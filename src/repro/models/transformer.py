@@ -384,9 +384,13 @@ def rwkv_channel_mix(cm, x, shift_in):
 
 
 def mamba_path(mp, x, cfg: ModelConfig, *, conv_state=None, h_state=None,
-               decode: bool = False):
+               decode: bool = False, ctx: Optional[DistCtx] = None):
     """Mamba selective-SSM path of the Hymba block. x: (B,T,D).
-    Returns (y (B,T,D), new_conv_state, new_h_state)."""
+    Returns (y (B,T,D), new_conv_state, new_h_state).
+
+    ctx: when a TP mesh splits the inner channels (Ci column-parallel),
+    the registry-dispatched scan (cfg.ssm_impl == "pallas") keys its tuned
+    blk_c on the per-shard channel count — see DistCtx.tp_shards."""
     b_, t, d = x.shape
     ci = 2 * d
     n = cfg.ssm_state
@@ -415,6 +419,17 @@ def mamba_path(mp, x, cfg: ModelConfig, *, conv_state=None, h_state=None,
             xs[:, 0].astype(jnp.float32), dt[:, 0], bmat[:, 0], cmat[:, 0],
             mp["a_log"], mp["d"], h_state)
         y = y[:, None]
+    elif cfg.ssm_impl == "pallas":
+        # unified-registry dispatch: blk_c comes from the repro.tune cache
+        # keyed on the LOCAL channel shard (Ci/tp under a TP mesh), so the
+        # cached config matches the slab each device actually executes
+        from repro.kernels.ssm import ops as ssm_ops
+        from repro.kernels.ssm.kernel_def import SsmKey
+        shards = ctx.tp_shards(ci) if ctx is not None else 1
+        key = SsmKey(b=b_, t=t, c=ci // shards, n=n)
+        y, h_state = ssm_ops.ssm_scan(
+            xs.astype(jnp.float32), dt, bmat, cmat, mp["a_log"], mp["d"],
+            h_state, problem_key=key)
     else:
         chunk = 64 if (t % 64 == 0 and cfg.ssm_impl == "chunked") else 1
         if chunk > 1:

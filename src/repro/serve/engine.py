@@ -29,6 +29,13 @@ collected on every run — `run(..., collect_stats=True)` returns them, and
 `last_stats` always holds the most recent run's aggregates (the
 benchmarks/run.py --serve table reads those into the repro-bench
 artifact).
+
+Sharded serving: pass `mesh=` to run the engine tensor-parallel over a
+`repro.dist` mesh. Params and the per-slot K/V cache shard head-wise per
+`dist.sharding.serve_specs` (TP for attention/FFN weights, replicated
+scheduler state); prefill_into_slot and the decode step execute as
+sharded jitted computations while the FIFO slot loop stays host-side and
+device-count-agnostic. See docs/serving.md §Sharded serving.
 """
 
 from __future__ import annotations
@@ -55,6 +62,19 @@ PREFILL_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: a token prompt plus generation knobs.
+
+    rid must be unique per engine run — it keys the output dict AND the
+    per-request deterministic sample stream (fold_in(base_key, rid)), so
+    two requests with the same rid would draw identical randomness.
+    temperature 0.0 means greedy argmax.
+
+    Example::
+
+        import numpy as np, repro
+        r = repro.Request(rid=0, prompt=np.array([3, 1, 4]),
+                          max_new_tokens=8, temperature=0.7)
+    """
     rid: int
     prompt: np.ndarray            # (S,) int32
     max_new_tokens: int = 16
@@ -90,21 +110,101 @@ class _Slot:
     decode_steps: int = 0
 
 
+def aggregate_engine_stats(per_req: Dict[int, "RequestStats"], *,
+                           n_requests: int, n_steps: int, n_prefills: int,
+                           slot_steps_active: int, max_batch: int,
+                           wall_s: float) -> Dict[str, Any]:
+    """Fold per-request stats + scheduler counters into the engine dict
+    (the `last_stats` schema benchmarks/run.py --serve reads).
+
+    Definitions (tests/test_serve_stats.py pins these):
+      occupancy   = slot_steps_active / (n_steps * max_batch); an idle run
+                    (no decode steps) is vacuously fully occupied (1.0).
+      tok_per_s   = total generated tokens / wall_s (engine throughput,
+                    prefill + decode inclusive since wall_s spans the run).
+      mean_*      = arithmetic means over finished requests (0.0 when no
+                    request finished).
+    """
+    total_new = sum(st.new_tokens for st in per_req.values())
+    return {
+        "requests": n_requests,
+        "decode_steps": n_steps,
+        "prefills": n_prefills,
+        "new_tokens": total_new,
+        "occupancy": (slot_steps_active / (n_steps * max_batch)
+                      if n_steps else 1.0),
+        "wall_s": wall_s,
+        "tok_per_s": total_new / max(wall_s, 1e-9),
+        "mean_queue_wait_s": (float(np.mean([s.queue_wait_s
+                                             for s in per_req.values()]))
+                              if per_req else 0.0),
+        "mean_ttft_s": (float(np.mean([s.ttft_s
+                                       for s in per_req.values()]))
+                        if per_req else 0.0),
+    }
+
+
 class ServeEngine:
+    """Slot-level continuous-batching LM server over one compiled decode
+    step. See the module docstring for the scheduling model and
+    docs/serving.md for the full guide.
+
+    Example (tiny model, CPU)::
+
+        import jax, numpy as np, repro
+        from repro.configs.base import get_config, reduce_config
+        cfg = reduce_config(get_config("qwen2-1.5b"), d_model=64, vocab=128)
+        params = repro.build_model(cfg).init_params(jax.random.PRNGKey(0))
+        eng = repro.ServeEngine(cfg, params, max_batch=2, cache_len=64)
+        out = eng.run([repro.Request(rid=0, prompt=np.arange(5),
+                                     max_new_tokens=8)])
+
+    mesh: optional `jax.sharding.Mesh` with a "model" axis — the engine
+    then serves tensor-parallel: params and the slot K/V cache shard per
+    `repro.dist.sharding.serve_specs`, the scheduler stays host-side, and
+    outputs are bit-exact vs the mesh-less engine on a 1-device mesh.
+    """
+
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
-                 cache_len: int = 512, rng_seed: int = 0):
+                 cache_len: int = 512, rng_seed: int = 0, mesh=None):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
-        self.params = params
         self.max_batch = max_batch
         self.cache_len = cache_len
+        self.mesh = mesh
         # never split: per-request sample keys are fold_in derivations of
         # this base, so no shared RNG state advances across requests.
         self.rng = jax.random.PRNGKey(rng_seed)
         self.last_stats: Optional[Dict[str, Any]] = None
 
+        if mesh is not None:
+            from repro.dist.sharding import serve_specs
+            from repro.models.layers import DistCtx
+            self._specs = serve_specs(cfg, mesh, max_batch=max_batch,
+                                      cache_len=cache_len, model=self.model)
+            # commit params onto the mesh once; every jitted step below
+            # inherits the layout (row/column-parallel weights, head-wise
+            # sharded cache, replicated scheduler state)
+            self.params = jax.device_put(params, self._specs.params)
+            # the ctx threads per-shard sizes into the flash/ssm registry
+            # dispatch (tuned block configs key on the LOCAL shard of the
+            # problem, not the global shape)
+            self._ctx = DistCtx(mesh=mesh, data_axes=(), model_axis="model")
+            self._cache_bytes_local = self._local_cache_bytes()
+        else:
+            self._specs = None
+            self._ctx = None
+            self.params = params
+            self._cache_bytes_local = 0
+
+        from repro.models.layers import exact_tp_scope
+
         def _decode_masked(p, c, t, active):
-            logits, new = self.model.decode_step(p, c, t)
+            # exact_tp_scope is trace-time: with a mesh it makes every
+            # row-parallel contraction gather-then-compute (bit-exact);
+            # mesh=None makes it a no-op.
+            with exact_tp_scope(mesh):
+                logits, new = self.model.decode_step(p, c, t, self._ctx)
             # done-row masking: hold finished slots' pos so their cache
             # rows stop growing — the step writes one (masked, invisible)
             # line at the held position and the row costs nothing
@@ -112,9 +212,29 @@ class ServeEngine:
             new["pos"] = jnp.where(active, new["pos"], c["pos"])
             return logits, new
 
-        self._decode = jax.jit(_decode_masked)
-        self._prefill_slot = jax.jit(
-            lambda p, c, s, b, n: self.model.prefill_into_slot(p, c, s, b, n))
+        def _prefill_slot(p, c, s, b, n):
+            with exact_tp_scope(mesh):
+                return self.model.prefill_into_slot(p, c, s, b, n,
+                                                    self._ctx)
+
+        if mesh is None:
+            self._decode = jax.jit(_decode_masked)
+            self._prefill_slot = jax.jit(_prefill_slot)
+        else:
+            # pin the cache layout across steps (out_shardings) so XLA
+            # cannot silently gather the sharded K/V between prefill and
+            # decode; logits replicate — the host samples from them.
+            sp = self._specs
+            self._decode = jax.jit(
+                _decode_masked,
+                in_shardings=(sp.params, sp.cache, sp.replicated,
+                              sp.replicated),
+                out_shardings=(sp.replicated, sp.cache))
+            self._prefill_slot = jax.jit(
+                _prefill_slot,
+                in_shardings=(sp.params, sp.cache, sp.replicated,
+                              sp.replicated, sp.replicated),
+                out_shardings=(sp.replicated, sp.cache))
         self._sample = jax.jit(self._sample_batch_impl)
 
     # ------------------------------------------------------------- sampling
@@ -167,7 +287,43 @@ class ServeEngine:
         cache = self.model.init_cache(self.max_batch, self.cache_len)
         # per-row positions: each slot decodes at its own offset
         cache["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
+        if self._specs is not None:
+            cache = jax.device_put(cache, self._specs.cache)
         return cache
+
+    # ------------------------------------------------------------ per-device
+
+    def _local_cache_bytes(self) -> int:
+        """One device's cache shard bytes, from the pinned shard shapes
+        (identical per device: shard_shape is uniform). The layout is
+        fixed at construction, so this is computed once in __init__."""
+        ab = self.model.init_cache(self.max_batch, self.cache_len,
+                                   abstract=True)
+        ab["pos"] = jax.ShapeDtypeStruct((self.max_batch,), jnp.int32)
+        cache_b = 0
+        for sharding, leaf in zip(jax.tree.leaves(self._specs.cache),
+                                  jax.tree.leaves(ab)):
+            n = 1
+            for s in sharding.shard_shape(leaf.shape):
+                n *= s
+            cache_b += n * leaf.dtype.itemsize
+        return cache_b
+
+    def device_stats(self) -> List[Dict[str, Any]]:
+        """Per-device shard accounting on a sharded engine ([] without a
+        mesh): for every mesh device, the bytes of its local param shards
+        (measured from the committed arrays) and of its local cache
+        shards. benchmarks/run.py --serve --mesh emits one artifact row
+        per entry."""
+        if self.mesh is None:
+            return []
+        params_b: Dict[int, int] = {d.id: 0 for d in self.mesh.devices.flat}
+        for leaf in jax.tree.leaves(self.params):
+            for sh in leaf.addressable_shards:
+                params_b[sh.device.id] += sh.data.nbytes
+        return [{"device": did, "params_bytes": pb,
+                 "cache_bytes": self._cache_bytes_local}
+                for did, pb in sorted(params_b.items())]
 
     def _admit(self, cache, slot_idx: int, r: Request, t_enqueue: float):
         """Prefill r into slot_idx's cache lines; returns
@@ -269,23 +425,17 @@ class ServeEngine:
                     finish(i)
 
         wall = time.perf_counter() - t_run
-        total_new = sum(st.new_tokens for st in per_req.values())
-        engine_stats = {
-            "requests": len(requests),
-            "decode_steps": n_steps,
-            "prefills": n_prefills,
-            "new_tokens": total_new,
-            "occupancy": (slot_steps_active / (n_steps * self.max_batch)
-                          if n_steps else 1.0),
-            "wall_s": wall,
-            "tok_per_s": total_new / max(wall, 1e-9),
-            "mean_queue_wait_s": (float(np.mean([s.queue_wait_s
-                                                 for s in per_req.values()]))
-                                  if per_req else 0.0),
-            "mean_ttft_s": (float(np.mean([s.ttft_s
-                                           for s in per_req.values()]))
-                            if per_req else 0.0),
-        }
+        engine_stats = aggregate_engine_stats(
+            per_req, n_requests=len(requests), n_steps=n_steps,
+            n_prefills=n_prefills, slot_steps_active=slot_steps_active,
+            max_batch=self.max_batch, wall_s=wall)
+        if self.mesh is not None:
+            per_dev = self.device_stats()
+            engine_stats["devices"] = len(per_dev)
+            engine_stats["per_device"] = [
+                {**d, "occupancy": engine_stats["occupancy"],
+                 "tok_per_s": engine_stats["tok_per_s"]}
+                for d in per_dev]
         self.last_stats = engine_stats
         if collect_stats:
             return out, {"requests": per_req, "engine": engine_stats}

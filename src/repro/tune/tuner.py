@@ -138,13 +138,27 @@ def tune_kernel(kernel: str, key, *, version: Optional[str] = None,
                 top_k: int = 3, warmup: int = 1, reps: int = 3,
                 cache_dir: Optional[str] = None, use_cache: bool = True,
                 seed: int = 0) -> TunedConfig:
-    """Pick the best config for (kernel, key, backend, version).
+    """Pick the best config for (kernel, key, backend, version) — the
+    model-then-measure flow: rank the kernel's feasible configs by its
+    analytic roofline model, then (when measurement is allowed) time the
+    top_k on synthetic inputs and let wall clock break the near-ties.
 
     measure_mode: True forces the timing pass, False forces model-only,
     None (default) measures iff the backend is TPU or the kernel's
     measure_ok(key) allows CPU interpret timing. The result is memoized
     in-process and persisted to the JSON cache (use_cache=False bypasses
-    both)."""
+    both); TunedConfig.source records which path chose it
+    (model | measured | cache).
+
+    Example::
+
+        import repro
+        from repro.kernels.flash.kernel_def import FlashKey
+        tc = repro.tune_kernel(
+            "flash", FlashKey(b=4, h=8, kvh=2, sq=256, skv=256, hd=64),
+            measure_mode=False)
+        tc.config.blk_q, tc.source      # (256, 'model')
+    """
     from repro.kernels import api
     k = api.get_kernel(kernel)
     version = version or k.default_version

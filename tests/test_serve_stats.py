@@ -1,0 +1,122 @@
+"""Serve stats math — the aggregation behind `benchmarks/run.py --serve`.
+
+The engine's per-request stats were covered by test_serve.py's schema
+test; the AGGREGATION (occupancy / tok_per_s / TTFT & queue-wait means)
+was only exercised via the smoke job. These tests pin the formulas twice:
+directly on `aggregate_engine_stats` with synthetic inputs (exact
+arithmetic), and on a real engine run by recomputing every aggregate from
+the per-request records it returns alongside.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduce_config
+from repro.models.registry import build_model
+from repro.serve.engine import (Request, RequestStats, ServeEngine,
+                                aggregate_engine_stats)
+
+
+def _rs(rid, new_tokens, queue, ttft, steps, total):
+    return RequestStats(rid=rid, prompt_len=4, new_tokens=new_tokens,
+                        queue_wait_s=queue, ttft_s=ttft,
+                        decode_steps=steps, total_s=total,
+                        tok_per_s=new_tokens / max(total - queue, 1e-9))
+
+
+# ------------------------------------------------------------- pure formulas
+
+def test_aggregate_formulas_exact():
+    per_req = {1: _rs(1, 8, 0.1, 0.3, 7, 1.0),
+               2: _rs(2, 4, 0.5, 0.6, 3, 0.9)}
+    e = aggregate_engine_stats(per_req, n_requests=2, n_steps=10,
+                               n_prefills=2, slot_steps_active=10,
+                               max_batch=2, wall_s=2.0)
+    assert e["requests"] == 2 and e["prefills"] == 2
+    assert e["new_tokens"] == 12
+    assert e["decode_steps"] == 10
+    assert e["occupancy"] == 10 / (10 * 2)
+    assert e["tok_per_s"] == 12 / 2.0
+    assert e["mean_queue_wait_s"] == pytest.approx((0.1 + 0.5) / 2)
+    assert e["mean_ttft_s"] == pytest.approx((0.3 + 0.6) / 2)
+    assert e["wall_s"] == 2.0
+
+
+def test_aggregate_empty_and_prefill_only_edges():
+    """No decode steps (all requests prefill-only) must not divide by
+    zero: occupancy is vacuously 1.0; an empty run aggregates to zeros."""
+    e = aggregate_engine_stats({}, n_requests=0, n_steps=0, n_prefills=0,
+                               slot_steps_active=0, max_batch=4, wall_s=0.0)
+    assert e["new_tokens"] == 0 and e["occupancy"] == 1.0
+    assert e["mean_queue_wait_s"] == 0.0 and e["mean_ttft_s"] == 0.0
+    assert e["tok_per_s"] == 0.0
+    one = aggregate_engine_stats({7: _rs(7, 1, 0.0, 0.1, 0, 0.2)},
+                                 n_requests=1, n_steps=0, n_prefills=1,
+                                 slot_steps_active=0, max_batch=4,
+                                 wall_s=0.5)
+    assert one["occupancy"] == 1.0 and one["new_tokens"] == 1
+
+
+# ------------------------------------------------------- real-run identities
+
+@pytest.fixture(scope="module")
+def run_stats():
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_batch=3, cache_len=64)
+    reqs = [Request(rid=i, prompt=np.arange(3 + i) % 128,
+                    max_new_tokens=(2 if i % 2 else 7)) for i in range(7)]
+    out, stats = eng.run(reqs, collect_stats=True)
+    return eng, out, stats
+
+
+def test_engine_aggregates_match_per_request_records(run_stats):
+    """Every engine aggregate must be recomputable from the per-request
+    records: slot-steps = sum of request decode_steps, tokens = sum of
+    new_tokens, means = arithmetic means, tok_per_s = tokens / wall."""
+    eng, out, stats = run_stats
+    per = stats["requests"].values()
+    e = stats["engine"]
+    assert e["new_tokens"] == sum(r.new_tokens for r in per) \
+        == sum(len(v) for v in out.values())
+    # each active slot-step belongs to exactly one request
+    assert e["occupancy"] == pytest.approx(
+        sum(r.decode_steps for r in per) / (e["decode_steps"]
+                                            * eng.max_batch))
+    assert e["tok_per_s"] == pytest.approx(e["new_tokens"] / e["wall_s"])
+    assert e["mean_ttft_s"] == pytest.approx(
+        float(np.mean([r.ttft_s for r in per])))
+    assert e["mean_queue_wait_s"] == pytest.approx(
+        float(np.mean([r.queue_wait_s for r in per])))
+    assert "per_device" not in e       # mesh-less engine: no device rows
+
+
+def test_per_request_throughput_consistent(run_stats):
+    """tok_per_s of a request is its tokens over its in-slot time
+    (total - queue wait), and the timing chain is ordered."""
+    _, _, stats = run_stats
+    for r in stats["requests"].values():
+        assert 0.0 <= r.queue_wait_s <= r.ttft_s <= r.total_s
+        assert r.tok_per_s == pytest.approx(
+            r.new_tokens / max(r.total_s - r.queue_wait_s, 1e-9), rel=1e-6)
+
+
+def test_serve_bench_row_parses(run_stats):
+    """The --serve artifact row derived-string format round-trips through
+    report.parse_derived with the gateable metric names intact."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.report import parse_derived
+    eng, _, _ = run_stats
+    e = eng.last_stats
+    derived = (f"decode_steps={e['decode_steps']};prefills={e['prefills']};"
+               f"new_tokens={e['new_tokens']};occupancy={e['occupancy']:.3f};"
+               f"tok_per_s={e['tok_per_s']:.1f}")
+    m = parse_derived(derived)
+    assert m["decode_steps"] == e["decode_steps"]
+    assert m["occupancy"] == pytest.approx(e["occupancy"], abs=5e-4)
+    assert m["tok_per_s"] >= 0

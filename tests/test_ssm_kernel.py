@@ -49,6 +49,48 @@ def test_property_seeds(seed):
                                atol=1e-4, rtol=1e-4)
 
 
+def test_mamba_path_pallas_route_matches_chunked():
+    """cfg.ssm_impl="pallas" routes the hybrid prefill scan through the
+    kernel registry (ops.ssm_scan with an explicit shard-local SsmKey);
+    output must match the chunked XLA path bit-for-bit here (1 device,
+    same f32 math) and the tune cache must hold a key for the LOCAL
+    channel count the call site derived."""
+    import dataclasses
+
+    from repro.configs.base import get_config, reduce_config
+    from repro.models.registry import build_model
+    cfg = reduce_config(get_config("hymba-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    toks = jnp.asarray((np.arange(8) % 128)[None])
+    l0, _ = model.prefill(params, {"tokens": toks})
+    mp = build_model(dataclasses.replace(cfg, ssm_impl="pallas"))
+    lp, _ = mp.prefill(params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(lp, dtype=np.float32),
+                               np.asarray(l0, dtype=np.float32),
+                               rtol=0, atol=1e-5)
+
+
+def test_dispatch_problem_key_override_tunes_local_shard():
+    """api.dispatch(problem_key=...) keys config resolution on the given
+    (shard-local) problem instead of the global operand shapes — the
+    contract the sharded ServeEngine's kernel call sites rely on."""
+    from repro.kernels import api
+    from repro.kernels.ssm.kernel_def import SsmKey
+    from repro.tune import tuner
+    args = _mk(1, 8, 16, 4)
+    local = SsmKey(b=1, t=8, c=8, n=4)          # c/2: a 2-way TP shard
+    y, hT = api.dispatch("ssm", *args, problem_key=local, interpret=True)
+    yref, href = ssm_scan(*args)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yref),
+                               atol=1e-4, rtol=1e-4)
+    # the tuned config came from the LOCAL key and tiles the local slab
+    tc = tuner.tune_kernel("ssm", local)
+    assert local.key_dims() in tc.key
+    assert local.c % tc.config.blk_c == 0
+
+
 def test_kernel_traffic_model_sane():
     # kernel I/O must be far below the chunked-XLA materialization:
     # ~6 (B,T,C,N) f32 arrays vs ~3 (B,T,C) + small

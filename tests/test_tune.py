@@ -239,3 +239,41 @@ def test_compare_cli_exit_codes(tmp_path):
                         "--compare", p_old, p_new, "--warn-only"],
                        cwd=ROOT, env=env, capture_output=True, text=True)
     assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_compare_rejects_malformed_provenance_legibly(tmp_path):
+    """A hand-edited baseline whose kernel_config lost a provenance key
+    (or isn't an object at all) must fail the gate with exit 2 and a
+    clear message — not a traceback out of the churn formatter."""
+    import json
+    sys.path.insert(0, ROOT)
+    from benchmarks import report
+    good = [{"name": "r", "us_per_call": None, "derived": "step_s=1.0",
+             "kernel_config": {"kernel": "gpp", "version": "v10",
+                               "config": {"blk_ig": 512}, "source": "model"}}]
+    p_new = str(tmp_path / "n.json")
+    report.write_artifact(good, p_new)
+
+    def _broken(fname, mutate):
+        art = report.make_artifact(good)
+        mutate(art["rows"][0])
+        p = str(tmp_path / fname)
+        json.dump(art, open(p, "w"))
+        return p
+
+    p_missing = _broken("missing.json",
+                        lambda r: r["kernel_config"].pop("source"))
+    assert report.run_compare(p_missing, p_new) == 2
+    p_str = _broken("str.json", lambda r: r.update(kernel_config="gpp/v10"))
+    assert report.run_compare(p_str, p_new) == 2
+    with pytest.raises(report.ArtifactError, match="provenance"):
+        report.validate_artifact(report.load_artifact(p_missing), p_missing)
+    # the CLI surfaces it on stderr with exit 2 and no traceback
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-m", "benchmarks.report",
+                        "--compare", p_missing, p_new], cwd=ROOT, env=env,
+                       capture_output=True, text=True)
+    assert r.returncode == 2, r.stdout + r.stderr
+    assert "provenance" in r.stderr and "Traceback" not in r.stderr
+    # a missing file is also a clean error, not a traceback
+    assert report.run_compare(str(tmp_path / "nope.json"), p_new) == 2

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Docs checks for the CI `docs` job (stdlib only, no jax import).
+
+    python tools/check_docs.py                   # link check
+    python tools/check_docs.py --run-quickstart  # + run the README
+                                                 #   quickstart verbatim
+
+Link check: every relative markdown link in README.md and docs/*.md must
+resolve to an existing file (and, for `file.md#anchor` / `#anchor`
+links, to a heading that slugifies to the anchor). External http(s)
+links are not fetched.
+
+Quickstart check: extracts the first fenced ```bash block under the
+README's "## Quickstart" heading and runs it verbatim from the repo
+root — the README must never document a command that doesn't work.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) — excluding images; target split on '#'
+_LINK = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def doc_files() -> list:
+    files = [os.path.join(ROOT, "README.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop non-word chars except
+    spaces/hyphens, spaces -> hyphens. (Approximate but covers our
+    headings, including the `§`-prefixed ones.)"""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def anchors_in(path: str) -> set:
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    return {github_slug(m.group(1)) for m in _HEADING.finditer(text)}
+
+
+def check_links(files=None) -> list:
+    """Returns a list of 'file: broken link' error strings (empty = ok)."""
+    errors = []
+    for path in files or doc_files():
+        rel = os.path.relpath(path, ROOT)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            frag = None
+            if "#" in target:
+                target, frag = target.split("#", 1)
+            if target:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), target))
+                if not os.path.exists(dest):
+                    errors.append(f"{rel}: broken link -> {m.group(1)}")
+                    continue
+            else:
+                dest = path                      # same-file #anchor
+            if frag is not None and dest.endswith(".md"):
+                if github_slug(frag) not in anchors_in(dest):
+                    errors.append(f"{rel}: broken anchor -> {m.group(1)}")
+    return errors
+
+
+def quickstart_block(readme=None) -> str:
+    """The first fenced bash block under '## Quickstart' in the README."""
+    path = readme or os.path.join(ROOT, "README.md")
+    with open(path, encoding="utf-8") as fh:
+        text = fh.read()
+    m = re.search(r"^##\s+Quickstart.*?```bash\n(.*?)```", text,
+                  re.DOTALL | re.MULTILINE)
+    if not m:
+        raise SystemExit("README.md has no ## Quickstart ```bash block")
+    return m.group(1).strip()
+
+
+def run_quickstart() -> int:
+    cmd = quickstart_block()
+    print(f"$ {cmd}")
+    return subprocess.run(cmd, shell=True, cwd=ROOT).returncode
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--run-quickstart", action="store_true",
+                    help="also execute the README quickstart block")
+    args = ap.parse_args()
+    errors = check_links()
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"docs: {len(doc_files())} files, all relative links resolve")
+    if args.run_quickstart:
+        rc = run_quickstart()
+        if rc:
+            print(f"error: quickstart exited {rc}", file=sys.stderr)
+            return rc
+        print("docs: README quickstart ran clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -67,11 +67,17 @@ SCHEMA = "repro-bench/v1"
 # metric-name direction table for the regression gate. Substring match on
 # the metric key; anything matching neither list is informational only.
 LOWER_BETTER = ("us_per_call", "step_s", "modeled_s", "cpu_ms", "compute_s",
-                "memory_s", "measured_us", "gib", "vmem_mib", "bytes")
-HIGHER_BETTER = ("tflops", "pct_vpu_peak", "roofline", "speedup")
+                "memory_s", "measured_us", "gib", "vmem_mib", "bytes",
+                "ttft", "tpot", "queue_depth", "wasted_toks")
+HIGHER_BETTER = ("tflops", "pct_vpu_peak", "roofline", "speedup",
+                 "goodput", "tok_per_tick")
 # wall-clock metrics are machine-dependent noise across CI hosts: excluded
-# from the gate unless --include-wallclock
-WALLCLOCK = ("us_per_call", "measured_us", "cpu_ms")
+# from the gate unless --include-wallclock. The router's tick-denominated
+# SLO metrics (ttft_ticks/tpot_ticks/queue_depth/goodput_toks) are
+# deterministic functions of the trace seed and gate cleanly; their _s/_ms
+# twins are wall-clock and land here.
+WALLCLOCK = ("us_per_call", "measured_us", "cpu_ms",
+             "ttft_s", "ttft_ms", "tpot_s", "tpot_ms", "tok_per_s")
 
 
 # ---------------------------------------------------------------------------

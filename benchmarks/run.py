@@ -30,6 +30,13 @@ Tables:
                          (decode steps / occupancy are deterministic;
                          latency/throughput fields are wall clock). Also
                          reachable via the --serve shortcut.
+  router               — multi-replica DP router under a seeded bursty
+                         trace: p50/p99 TTFT + time-per-output-token
+                         (tick-denominated rows are deterministic and
+                         gateable; _ms rows are wall clock), queue depth,
+                         goodput-under-burst, per-replica rows. Shortcut:
+                         --router [--replicas N] [--fault kill:R@T or
+                         stall:R@T+D].
 """
 
 from __future__ import annotations
@@ -296,6 +303,100 @@ def serve():
              f"cache_mib={d['cache_bytes'] / 2**20:.3f}")
 
 
+# --router knobs, set by main()
+ROUTER_REPLICAS = 2
+ROUTER_FAULT = None
+
+
+def _parse_fault(spec: str):
+    """'kill:R@T' or 'stall:R@T+D' -> FaultPlan (import-free parse check
+    lives here so argparse errors stay legible)."""
+    from repro.serve.router import FaultPlan
+    plan = FaultPlan()
+    for part in spec.split(","):
+        kind, sep, rest = part.partition(":")
+        try:
+            if kind == "kill":
+                rep, tick = rest.split("@")
+                plan.kill(int(rep), at_tick=int(tick))
+            elif kind == "stall":
+                rep, rest2 = rest.split("@")
+                tick, dur = rest2.split("+")
+                plan.stall(int(rep), at_tick=int(tick), ticks=int(dur))
+            else:
+                raise ValueError(kind)
+        except ValueError:
+            raise SystemExit(
+                f"--fault expects 'kill:R@T' or 'stall:R@T+D' "
+                f"(comma-separated), got {part!r}")
+    return plan
+
+
+def router():
+    """The serving-tier SLO table: a seeded bursty trace load-balanced
+    across ROUTER_REPLICAS replica engines (optionally with a scripted
+    fault). Tick-denominated tail-latency rows, queue depth, and
+    goodput-under-burst counts are deterministic — the same trace seed
+    schedules identically on every host, so report.py --compare can gate
+    tail latency. The _ms mirrors and tok-per-wall-second rates are wall
+    clock (informational; see report.WALLCLOCK)."""
+    import jax
+
+    from repro.configs.base import get_config, reduce_config
+    from repro.models.registry import build_model
+    from repro.serve.router import Router
+    from repro.serve.trace import TraceConfig, generate_trace
+
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    # bursty heavy-tail mix sized so bursts actually overlap the run:
+    # ~0.5s of calm, then a 4x-rate burst window every second
+    trace = generate_trace(TraceConfig(
+        n_requests=24, arrival="bursty", rate_rps=16.0, burst_factor=4.0,
+        burst_every_s=1.0, burst_len_s=0.5, prompt_median=6,
+        prompt_sigma=0.6, prompt_max=24, out_median=8, out_sigma=0.8,
+        out_max=32, temperatures=(0.0, 0.7), vocab=128, seed=0))
+    plan = _parse_fault(ROUTER_FAULT) if ROUTER_FAULT else None
+    rt = Router(cfg, params, replicas=ROUTER_REPLICAS, max_batch=4,
+                cache_len=64, fault_plan=plan, stale_after_ticks=3)
+    out, s = rt.run(trace, tick_s=0.05)
+    fault_note = f";fault={ROUTER_FAULT}" if ROUTER_FAULT else ""
+    _csv("router_engine", s["wall_s"] * 1e6,
+         f"replicas={s['replicas']};completed={s['completed']};"
+         f"requeued={s['requeued']};ticks={s['ticks']};"
+         f"decode_steps={s['decode_steps']};prefills={s['prefills']};"
+         f"goodput_toks={s['goodput_toks']};wasted_toks={s['wasted_toks']};"
+         f"goodput_tok_per_s={s['goodput_tok_per_s']:.1f}{fault_note}")
+    _csv("router_slo_ticks", None,
+         f"p50_ttft_ticks={s['p50_ttft_ticks']:.2f};"
+         f"p99_ttft_ticks={s['p99_ttft_ticks']:.2f};"
+         f"p50_tpot_ticks={s['p50_tpot_ticks']:.3f};"
+         f"p99_tpot_ticks={s['p99_tpot_ticks']:.3f}")
+    _csv("router_slo_wall", None,
+         f"p50_ttft_ms={s['p50_ttft_s'] * 1e3:.1f};"
+         f"p99_ttft_ms={s['p99_ttft_s'] * 1e3:.1f};"
+         f"p50_tpot_ms={s['p50_tpot_s'] * 1e3:.2f};"
+         f"p99_tpot_ms={s['p99_tpot_s'] * 1e3:.2f}")
+    _csv("router_queue", None,
+         f"mean_queue_depth={s['mean_queue_depth']:.2f};"
+         f"p99_queue_depth={s['p99_queue_depth']:.2f};"
+         f"max_queue_depth={s['max_queue_depth']}")
+    b = s.get("burst")
+    if b:
+        _csv("router_burst", None,
+             f"burst_ticks={b['ticks']};burst_arrivals={b['arrivals']};"
+             f"burst_new_tokens={b['new_tokens']};"
+             f"burst_tok_per_tick={b['tok_per_tick']:.2f}")
+    for pr in s["per_replica"]:
+        _csv(f"router_replica_{pr['replica']}", None,
+             f"decode_steps={pr['decode_steps']};"
+             f"prefills={pr['prefills']};completed={pr['completed']};"
+             f"evicted={pr['evicted']};stalled_ticks={pr['stalled_ticks']};"
+             f"killed={pr['killed']};fenced={pr['fenced']}")
+
+
 TABLES = {
     "gpp_journey": table1_gpp_journey,
     "roofline_terms": fig_roofline_terms,
@@ -306,6 +407,7 @@ TABLES = {
     "model_cells": model_cells,
     "train_step_cpu": train_step_cpu,
     "serve": serve,
+    "router": router,
 }
 
 # the cheap, deterministic-model subset CI benchmarks and the committed
@@ -328,8 +430,19 @@ def main() -> None:
                     help="with --serve: run the engine tensor-parallel "
                          "over an N-way model axis (forces N host devices "
                          "when jax is not yet initialized)")
+    ap.add_argument("--router", action="store_true",
+                    help="shortcut for --only router (multi-replica DP "
+                         "router SLO rows)")
+    ap.add_argument("--replicas", type=int, default=2, metavar="N",
+                    help="with --router: number of replica engines "
+                         "(default 2)")
+    ap.add_argument("--fault", default=None, metavar="SPEC",
+                    help="with --router: scripted fault(s), "
+                         "'kill:R@T' or 'stall:R@T+D' (comma-separated)")
     args = ap.parse_args()
-    if args.serve:
+    if args.router:
+        todo = ["router"]
+    elif args.serve:
         todo = ["serve"]
     elif args.only is None:
         todo = list(TABLES)
@@ -358,6 +471,17 @@ def main() -> None:
                 ).strip()
         global SERVE_MESH
         SERVE_MESH = tp
+    if args.replicas != 2 or args.fault:
+        if "router" not in todo:
+            ap.error("--replicas/--fault only apply to the router table "
+                     "(use --router or --only router)")
+    if args.replicas < 1:
+        ap.error("--replicas must be >= 1")
+    global ROUTER_REPLICAS, ROUTER_FAULT
+    ROUTER_REPLICAS = args.replicas
+    if args.fault:
+        _parse_fault(args.fault)        # validate up front: SystemExit here
+        ROUTER_FAULT = args.fault       # beats a traceback mid-table
     print("name,us_per_call,derived")
     for name in todo:
         TABLES[name]()

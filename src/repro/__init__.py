@@ -16,6 +16,12 @@ carries a full docstring with a runnable example at its definition —
     ServeEngine(cfg, params, max_batch=, cache_len=, mesh=) / Request
         Slot-level continuous-batching server; pass mesh= to serve
         tensor-parallel over a repro.dist mesh (docs/serving.md).
+    Router(cfg, params, replicas=, fault_plan=) / FaultPlan
+        DP router over N replica engines with heartbeat failover and
+        deterministic fault injection (docs/serving.md §router).
+    generate_trace(TraceConfig(...))
+        Seeded synthetic request traces: Poisson/bursty arrivals,
+        heavy-tail length mixes.
     run_journey(size)
         The paper's Table I, v0-v10, on the modeled v5e roofline.
     tune_kernel(kernel, key)
@@ -40,6 +46,10 @@ _EXPORTS = {
     "list_kernels": "repro.kernels.api",
     "ServeEngine": "repro.serve.engine",
     "Request": "repro.serve.engine",
+    "Router": "repro.serve.router",
+    "FaultPlan": "repro.serve.router",
+    "TraceConfig": "repro.serve.trace",
+    "generate_trace": "repro.serve.trace",
     "build_model": "repro.models.registry",
     "run_journey": "repro.core.journey",
     "tune_kernel": "repro.tune.tuner",

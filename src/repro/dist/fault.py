@@ -47,7 +47,11 @@ class HeartbeatFile:
     per-boot, so `mono` is only trusted when the beat's `boot` id matches
     the reader's (same host, same boot); a supervisor on another host, or
     a read across a reboot, falls back to the wall clock — the only
-    cross-boot-comparable timestamp."""
+    cross-boot-comparable timestamp. A same-boot beat whose `mono` sits in
+    the reader's future is non-monotonic — impossible for a beat this
+    kernel produced, so the file was deserialized/copied — and clamps to
+    the wall-clock fallback without the fresh-forever benefit of a
+    future wall time (age_s() returns None: presumed stale)."""
 
     def __init__(self, directory: str, name: str = "HEARTBEAT"):
         self.dir = directory
@@ -74,14 +78,31 @@ class HeartbeatFile:
             return None
         same_boot = ("mono" in b and b.get("boot") is not None
                      and b["boot"] == _boot_id())
+        wall = b.get("time")
+        if not isinstance(wall, (int, float)) or isinstance(wall, bool):
+            wall = None                      # beat without a usable wall time
         if same_boot:
             age = time.monotonic() - b["mono"]
-            # negative is impossible within one boot; be safe anyway
             if age >= 0.0:
                 return age
+            # A same-boot mono from the FUTURE is impossible for a beat
+            # this kernel produced: the file was deserialized/copied (a
+            # restored legacy beat, a hand-edited file). Such a beat must
+            # clamp to the wall-clock fallback — and its wall time gets no
+            # freshness benefit of the doubt either: if that is ALSO from
+            # the future, the beat is wholly untrustworthy and must read
+            # as never-beaten (stale), not fresh-forever (the max(0, ...)
+            # clamp below would have pinned its age at 0 indefinitely).
+            now = time.time()
+            if wall is None or wall > now:
+                return None
+            return now - wall
         # legacy beat (no mono/boot), another host, or across a reboot:
-        # wall clock is all we have
-        return max(0.0, time.time() - b["time"])
+        # wall clock is all we have. Clamp negative to 0 — NTP stepping
+        # the reader's clock backwards must not make a live worker stale.
+        if wall is None:
+            return None
+        return max(0.0, time.time() - wall)
 
     def stale(self, timeout_s: float = 300.0) -> bool:
         """True when the worker should be presumed dead (no beat within

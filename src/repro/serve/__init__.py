@@ -1,0 +1,19 @@
+"""Serving tier: the slot-scheduler engine, the multi-replica DP router,
+and the synthetic trace generator.
+
+  * engine — ServeEngine: slot-level continuous batching over one
+    compiled decode step (run() to drain, or the stepwise
+    submit()/step()/evict_inflight() surface drivers build on).
+  * router — Router: DP load balancing over N replica engines with
+    heartbeat failover and a deterministic FaultPlan.
+  * trace  — seeded Poisson/bursty request traces with heavy-tail
+    length mixes.
+
+See docs/serving.md.
+"""
+
+from repro.serve.engine import (Request, RequestStats, ServeEngine,  # noqa: F401
+                                StepReport, aggregate_engine_stats)
+from repro.serve.trace import (Trace, TraceConfig, TracedRequest,  # noqa: F401
+                               generate_trace)
+from repro.serve.router import FaultPlan, Router  # noqa: F401

@@ -30,6 +30,17 @@ collected on every run — `run(..., collect_stats=True)` returns them, and
 benchmarks/run.py --serve table reads those into the repro-bench
 artifact).
 
+The scheduler is exposed at two granularities. `run(requests)` drains a
+whole workload. The stepwise surface — `reset()`, `submit(request)`,
+`step()` (one admission pass + one batched decode step, returning a
+StepReport), `evict_inflight()`, `finalize()` — lets an outer driver
+interleave many engines and inject/remove work mid-flight; the
+multi-replica DP router (repro.serve.router) is built on it, re-queuing a
+dead replica's evicted requests onto survivors. Because sampling is
+per-request (below), a re-queued request restarted from scratch on any
+replica regenerates the exact token stream the dead replica would have
+produced.
+
 Sharded serving: pass `mesh=` to run the engine tensor-parallel over a
 `repro.dist` mesh. Params and the per-slot K/V cache shard head-wise per
 `dist.sharding.serve_specs` (TP for attention/FFN weights, replicated
@@ -110,6 +121,46 @@ class _Slot:
     decode_steps: int = 0
 
 
+@dataclasses.dataclass
+class StepReport:
+    """What one ServeEngine.step() round did — the router's per-tick feed.
+
+    admitted:    rids prefilled into a slot this round (their first token
+                 was sampled during admission)
+    finished:    rids whose last token was produced this round (including
+                 degenerate max_new_tokens<1 requests, which finish
+                 without ever occupying a slot)
+    decoded:     occupied rows in this round's batched decode step (0 when
+                 the decode was skipped because nothing was occupied)
+    queue_depth: requests still waiting after this round's admissions
+    """
+    admitted: List[int]
+    finished: List[int]
+    decoded: int
+    queue_depth: int
+
+
+def percentile(xs, q: float) -> float:
+    """Percentile with numpy's default linear interpolation, defined as
+    0.0 on an empty sample (a run where nothing qualified). n=1 and
+    all-equal samples degenerate to that single value for every q —
+    tests/test_serve_stats.py pins these edges."""
+    if len(xs) == 0:
+        return 0.0
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def request_tpot_s(st: "RequestStats") -> Optional[float]:
+    """Time-per-output-token of one finished request: the decode time
+    after its first token spread over the remaining tokens,
+    (total_s - ttft_s) / (new_tokens - 1). Undefined (None) for requests
+    with fewer than two tokens — a max_new_tokens<=1 request has no
+    inter-token gap to measure, so it contributes no TPOT sample."""
+    if st.new_tokens < 2:
+        return None
+    return (st.total_s - st.ttft_s) / (st.new_tokens - 1)
+
+
 def aggregate_engine_stats(per_req: Dict[int, "RequestStats"], *,
                            n_requests: int, n_steps: int, n_prefills: int,
                            slot_steps_active: int, max_batch: int,
@@ -124,9 +175,21 @@ def aggregate_engine_stats(per_req: Dict[int, "RequestStats"], *,
                     prefill + decode inclusive since wall_s spans the run).
       mean_*      = arithmetic means over finished requests (0.0 when no
                     request finished).
+      p50/p99_*   = distribution tails (linear-interpolated percentiles).
+                    TTFT samples come from requests that produced at least
+                    one token (a max_new_tokens<1 request records a
+                    vacuous 0.0 TTFT and is excluded); TPOT samples from
+                    requests with >= 2 tokens (see request_tpot_s).
     """
     total_new = sum(st.new_tokens for st in per_req.values())
+    ttfts = [st.ttft_s for st in per_req.values() if st.new_tokens > 0]
+    tpots = [t for t in (request_tpot_s(st) for st in per_req.values())
+             if t is not None]
     return {
+        "p50_ttft_s": percentile(ttfts, 50),
+        "p99_ttft_s": percentile(ttfts, 99),
+        "p50_tpot_s": percentile(tpots, 50),
+        "p99_tpot_s": percentile(tpots, 99),
         "requests": n_requests,
         "decode_steps": n_steps,
         "prefills": n_prefills,
@@ -176,6 +239,14 @@ class ServeEngine:
         # this base, so no shared RNG state advances across requests.
         self.rng = jax.random.PRNGKey(rng_seed)
         self.last_stats: Optional[Dict[str, Any]] = None
+        # scheduler state is armed lazily: reset() allocates the cache, so
+        # constructing an engine stays cheap; run() resets every time and
+        # submit() resets on first use. queue/slots exist from birth so
+        # idle/queue_depth/active_count are safe to read before the first
+        # reset.
+        self._cache = None
+        self._queue: deque = deque()
+        self._slots: List[Optional[_Slot]] = [None] * max_batch
 
         if mesh is not None:
             from repro.dist.sharding import serve_specs
@@ -354,80 +425,175 @@ class ServeEngine:
         return cache, slot, first
 
     # ------------------------------------------------------------ scheduler
+    #
+    # The scheduler is incremental: reset() arms a fresh run, submit()
+    # enqueues requests at any point, and step() performs one scheduler
+    # round (admit free slots FIFO, then one batched decode step). run()
+    # is the drain-everything convenience built on top; a multi-replica
+    # router (repro.serve.router) instead interleaves submit()/step()
+    # across engines and uses evict_inflight() for failover re-queue.
 
-    def run(self, requests: List[Request], *, collect_stats: bool = False):
-        """Serve requests with slot-level continuous batching. Returns
-        {rid: generated tokens}, or (that, stats) with collect_stats=True.
+    def reset(self) -> None:
+        """Arm a fresh scheduling run: empty queue/slots, a fresh cache,
+        zeroed counters. Called by run(); a stepwise driver (the router)
+        calls it once before its first submit()."""
+        self._queue: deque = deque()
+        self._reqs: Dict[int, Request] = {}      # in-flight rid -> Request
+        self._t_enq: Dict[int, float] = {}
+        self._out: Dict[int, List[int]] = {}
+        self._per_req: Dict[int, RequestStats] = {}
+        self._slots: List[Optional[_Slot]] = [None] * self.max_batch
+        self._cache = self._fresh_cache()
+        self._cur = np.zeros((self.max_batch, 1), np.int32)
+        self._n_steps = 0          # global batched decode steps
+        self._n_prefills = 0
+        self._n_submitted = 0
+        self._slot_steps_active = 0
+        self._t_start = time.perf_counter()
 
-        stats = {"requests": {rid: RequestStats}, "engine": {...}} — the
-        engine dict is what last_stats holds after every run."""
-        t_run = time.perf_counter()
-        queue = deque(requests)
-        t_enq = {r.rid: t_run for r in requests}
-        out: Dict[int, List[int]] = {r.rid: [] for r in requests}
-        per_req: Dict[int, RequestStats] = {}
-        slots: List[Optional[_Slot]] = [None] * self.max_batch
-        cache = self._fresh_cache()
-        cur = np.zeros((self.max_batch, 1), np.int32)
-        n_steps = 0          # global batched decode steps
-        n_prefills = 0
-        slot_steps_active = 0
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued and every slot is free."""
+        return not self._queue and all(s is None for s in self._slots)
 
-        def finish(i: int):
-            s = slots[i]
-            now = time.perf_counter()
-            per_req[s.rid] = RequestStats(
-                rid=s.rid, prompt_len=s.prompt_len, new_tokens=s.n_gen,
-                queue_wait_s=s.t_admit - s.t_enqueue,
-                ttft_s=s.t_first - s.t_enqueue,
-                decode_steps=s.decode_steps, total_s=now - s.t_enqueue,
-                tok_per_s=s.n_gen / max(now - s.t_admit, 1e-9))
-            slots[i] = None
+    @property
+    def queue_depth(self) -> int:
+        """Requests admitted by submit() but not yet occupying a slot."""
+        return len(self._queue)
 
-        while queue or any(s is not None for s in slots):
-            # refill every free slot from the queue before the next step
-            for i in range(self.max_batch):
-                if slots[i] is None and queue:
-                    r = queue.popleft()
-                    if r.max_new_tokens < 1:     # nothing to generate
-                        per_req[r.rid] = RequestStats(
-                            rid=r.rid, prompt_len=len(r.prompt),
-                            new_tokens=0, queue_wait_s=0.0, ttft_s=0.0,
-                            decode_steps=0, total_s=0.0, tok_per_s=0.0)
-                        continue
-                    cache, slot, first = self._admit(cache, i, r,
-                                                     t_enq[r.rid])
-                    n_prefills += 1
-                    out[r.rid].append(first)
-                    cur[i, 0] = first
-                    slots[i] = slot
-                    if slot.remaining <= 0:      # max_new_tokens == 1
-                        finish(i)
-            if not any(s is not None for s in slots):
-                continue                          # queue drained via finish
-            active = np.array([s is not None for s in slots])
-            logits, cache = self._decode(self.params, cache,
-                                         jnp.asarray(cur),
-                                         jnp.asarray(active))
-            n_steps += 1
-            slot_steps_active += int(active.sum())
-            toks = self._sample_rows(logits, slots)
-            for i, s in enumerate(slots):
-                if s is None:
+    @property
+    def active_count(self) -> int:
+        """Slots currently decoding a request."""
+        return sum(1 for s in self._slots if s is not None)
+
+    @property
+    def outputs(self) -> Dict[int, List[int]]:
+        """Tokens generated so far this run, {rid: [tok, ...]}."""
+        return self._out
+
+    @property
+    def request_stats(self) -> Dict[int, RequestStats]:
+        """Per-request records of requests FINISHED so far this run."""
+        return self._per_req
+
+    def submit(self, r: Request, *, t_enqueue: Optional[float] = None
+               ) -> None:
+        """Enqueue one request (FIFO). t_enqueue backdates the queue-wait/
+        TTFT clock — a router passes the moment the request arrived at the
+        router, so latency spans its whole queueing life, including a
+        failed first attempt on a replica that died."""
+        if self._cache is None:
+            self.reset()
+        self._queue.append(r)
+        self._reqs[r.rid] = r
+        self._t_enq[r.rid] = (time.perf_counter() if t_enqueue is None
+                              else t_enqueue)
+        self._out[r.rid] = []
+        self._n_submitted += 1
+
+    def _finish(self, i: int) -> int:
+        s = self._slots[i]
+        now = time.perf_counter()
+        self._per_req[s.rid] = RequestStats(
+            rid=s.rid, prompt_len=s.prompt_len, new_tokens=s.n_gen,
+            queue_wait_s=s.t_admit - s.t_enqueue,
+            ttft_s=s.t_first - s.t_enqueue,
+            decode_steps=s.decode_steps, total_s=now - s.t_enqueue,
+            tok_per_s=s.n_gen / max(now - s.t_admit, 1e-9))
+        self._slots[i] = None
+        self._reqs.pop(s.rid, None)
+        return s.rid
+
+    def step(self) -> StepReport:
+        """One scheduler round: refill every free slot from the queue
+        (each free slot index gets at most one admission attempt per
+        round), then run one batched decode step over the occupied slots.
+        Returns a StepReport; with nothing occupied after admission the
+        decode is skipped (decoded=0)."""
+        admitted: List[int] = []
+        finished: List[int] = []
+        for i in range(self.max_batch):
+            if self._slots[i] is None and self._queue:
+                r = self._queue.popleft()
+                if r.max_new_tokens < 1:     # nothing to generate
+                    self._per_req[r.rid] = RequestStats(
+                        rid=r.rid, prompt_len=len(r.prompt),
+                        new_tokens=0, queue_wait_s=0.0, ttft_s=0.0,
+                        decode_steps=0, total_s=0.0, tok_per_s=0.0)
+                    self._reqs.pop(r.rid, None)
+                    finished.append(r.rid)
                     continue
-                tok = int(toks[i])
-                out[s.rid].append(tok)
-                cur[i, 0] = tok
-                s.n_gen += 1
-                s.remaining -= 1
-                s.decode_steps += 1
-                if s.remaining <= 0:
-                    finish(i)
+                self._cache, slot, first = self._admit(
+                    self._cache, i, r, self._t_enq[r.rid])
+                self._n_prefills += 1
+                self._out[r.rid].append(first)
+                self._cur[i, 0] = first
+                self._slots[i] = slot
+                admitted.append(r.rid)
+                if slot.remaining <= 0:      # max_new_tokens == 1
+                    finished.append(self._finish(i))
+        if not any(s is not None for s in self._slots):
+            return StepReport(admitted=admitted, finished=finished,
+                              decoded=0, queue_depth=len(self._queue))
+        active = np.array([s is not None for s in self._slots])
+        logits, self._cache = self._decode(self.params, self._cache,
+                                           jnp.asarray(self._cur),
+                                           jnp.asarray(active))
+        self._n_steps += 1
+        self._slot_steps_active += int(active.sum())
+        toks = self._sample_rows(logits, self._slots)
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            tok = int(toks[i])
+            self._out[s.rid].append(tok)
+            self._cur[i, 0] = tok
+            s.n_gen += 1
+            s.remaining -= 1
+            s.decode_steps += 1
+            if s.remaining <= 0:
+                finished.append(self._finish(i))
+        return StepReport(admitted=admitted, finished=finished,
+                          decoded=int(active.sum()),
+                          queue_depth=len(self._queue))
 
-        wall = time.perf_counter() - t_run
+    def evict_inflight(self) -> Tuple[List[Request], int]:
+        """Failover support: pull every unfinished request (occupied slots
+        first, then the waiting queue) OUT of the engine so a router can
+        re-queue them onto surviving replicas. Partial outputs and timing
+        for the evicted rids are discarded — a re-queued request restarts
+        from scratch, and the per-request fold_in(rid, i) sample keys make
+        the restart token-for-token identical to an undisturbed run (the
+        chaos-tier contract). Returns (evicted requests, tokens thrown
+        away). The evicted slots' cache rows need no scrubbing: a freed
+        slot's pos is held (its rows are masked) until the next admission
+        overwrites them."""
+        evicted: List[Request] = []
+        wasted = 0
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            evicted.append(self._reqs.pop(s.rid))
+            wasted += len(self._out.pop(s.rid, []))
+            self._t_enq.pop(s.rid, None)
+            self._slots[i] = None
+        while self._queue:
+            r = self._queue.popleft()
+            evicted.append(self._reqs.pop(r.rid, r))
+            wasted += len(self._out.pop(r.rid, []))
+            self._t_enq.pop(r.rid, None)
+        self._n_submitted -= len(evicted)
+        return evicted, wasted
+
+    def finalize(self) -> Dict[str, Any]:
+        """Aggregate this run's counters into the engine-stats dict
+        (also stored on last_stats). run() calls it after draining; a
+        stepwise driver calls it when it stops driving the engine."""
+        wall = time.perf_counter() - self._t_start
         engine_stats = aggregate_engine_stats(
-            per_req, n_requests=len(requests), n_steps=n_steps,
-            n_prefills=n_prefills, slot_steps_active=slot_steps_active,
+            self._per_req, n_requests=self._n_submitted,
+            n_steps=self._n_steps, n_prefills=self._n_prefills,
+            slot_steps_active=self._slot_steps_active,
             max_batch=self.max_batch, wall_s=wall)
         if self.mesh is not None:
             per_dev = self.device_stats()
@@ -437,6 +603,25 @@ class ServeEngine:
                  "tok_per_s": engine_stats["tok_per_s"]}
                 for d in per_dev]
         self.last_stats = engine_stats
+        return engine_stats
+
+    def run(self, requests: List[Request], *, collect_stats: bool = False):
+        """Serve requests with slot-level continuous batching. Returns
+        {rid: generated tokens}, or (that, stats) with collect_stats=True.
+
+        stats = {"requests": {rid: RequestStats}, "engine": {...}} — the
+        engine dict is what last_stats holds after every run."""
+        self.reset()
+        for r in requests:
+            self._queue.append(r)
+            self._reqs[r.rid] = r
+            self._t_enq[r.rid] = self._t_start
+            self._out[r.rid] = []
+        self._n_submitted = len(requests)
+        while not self.idle:
+            self.step()
+        out = self._out
+        engine_stats = self.finalize()
         if collect_stats:
-            return out, {"requests": per_req, "engine": engine_stats}
+            return out, {"requests": self._per_req, "engine": engine_stats}
         return out

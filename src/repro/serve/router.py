@@ -1,0 +1,439 @@
+"""Multi-replica DP router: trace-driven load balancing over ServeEngines
+with heartbeat failover.
+
+PR 5 made ONE tensor-parallel replica bit-exact; production is N replicas
+behind a router. `Router` owns N `ServeEngine`s (data-parallel — same
+config/params, independent slot pools; each optionally exact-TP via the
+engine's `mesh=` path) and drives them with the engine's stepwise API on
+a deterministic virtual clock:
+
+  one tick = one scheduler round (admission + one batched decode step)
+  on every healthy replica.
+
+Per tick, in order: apply `FaultPlan` events, release trace arrivals
+whose virtual time has come, check replica heartbeats and fence stale
+replicas (re-queuing their in-flight work), dispatch the router queue
+least-loaded-first, then step every healthy replica (which also beats
+its heartbeat). Because arrivals, dispatch, admission, and sampling are
+all functions of the trace seed and the tick counter — never the wall
+clock — every token, queue-depth sample, and tick-denominated latency is
+reproducible, which is what lets chaos tests assert exact outcomes and
+lets `report.py --compare` gate tail-latency rows across machines.
+
+Failure model (wired through repro.dist.fault):
+
+  * Every replica owns a `HeartbeatFile` and beats its current tick each
+    healthy round — the same liveness file the training watchdog uses,
+    here exercised by an end-to-end loop for the first time.
+  * The router reads each beat and declares a replica DEAD when its last
+    beaten tick lags more than `stale_after_ticks` behind (tick-lag
+    staleness: the deterministic analogue of `HeartbeatFile.stale()`'s
+    wall-clock timeout). A killed replica stops stepping and beating; a
+    stalled one freezes for `FaultEvent.duration` ticks — a long enough
+    stall is indistinguishable from death and gets fenced too.
+  * Fencing a replica evicts its in-flight requests
+    (`ServeEngine.evict_inflight`) back onto the router queue, oldest
+    first, with their ORIGINAL enqueue times, and the replica never
+    rejoins (no resurrection: a fenced replica that wakes up again must
+    not double-serve re-queued work). Re-queued requests restart from
+    scratch on a survivor; the engine's per-request fold_in(rid, i)
+    sample keys make the restarted stream token-for-token identical to
+    an undisturbed run — partial tokens from the dead replica are
+    discarded and counted as `wasted_toks`.
+  * A `StepWatchdog` per replica (EWMA straggler detector) observes real
+    step wall-times; its events are reported in the stats but never
+    steer scheduling, so they cannot break determinism.
+
+The router is host-side and CPU-testable: `FaultPlan().kill(1, at_tick=8)`
+makes failover a deterministic unit-testable event, no process murder
+required (tests/test_router_chaos.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import tempfile
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.fault import HeartbeatFile, StepWatchdog
+from repro.serve.engine import (Request, RequestStats, ServeEngine,
+                                percentile, request_tpot_s)
+from repro.serve.trace import Trace
+
+
+# --------------------------------------------------------------- fault plan
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One scripted fault: at `tick`, `replica` is killed (permanently
+    stops stepping and beating) or stalled (frozen for `duration` ticks,
+    then resumes — unless the router fenced it first)."""
+    tick: int
+    replica: int
+    kind: str                 # "kill" | "stall"
+    duration: int = 0         # stall length in ticks (kind == "stall")
+
+
+class FaultPlan:
+    """A deterministic fault-injection script for Router.run.
+
+    Example::
+
+        from repro.serve.router import FaultPlan
+        plan = FaultPlan().kill(1, at_tick=8).stall(0, at_tick=3, ticks=2)
+        assert len(plan.events_at(8)) == 1
+    """
+
+    def __init__(self, events: Optional[List[FaultEvent]] = None):
+        self.events: List[FaultEvent] = list(events or [])
+
+    def kill(self, replica: int, *, at_tick: int) -> "FaultPlan":
+        self.events.append(FaultEvent(tick=at_tick, replica=replica,
+                                      kind="kill"))
+        return self
+
+    def stall(self, replica: int, *, at_tick: int, ticks: int
+              ) -> "FaultPlan":
+        self.events.append(FaultEvent(tick=at_tick, replica=replica,
+                                      kind="stall", duration=ticks))
+        return self
+
+    def events_at(self, tick: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.tick == tick]
+
+
+# ------------------------------------------------------------- SLO summary
+
+def router_slo_summary(ttft_ticks: List[int], tpot_ticks: List[float],
+                       ttft_s: List[float], tpot_s: List[float],
+                       queue_depth_samples: List[int]) -> Dict[str, Any]:
+    """Fold raw per-request latency samples + per-tick queue depths into
+    the router's SLO stats (tails via the shared linear-interpolation
+    `percentile`; empty samples degrade to 0.0 — the edge cases are
+    pinned by tests/test_serve_stats.py against a hand-computed fixture).
+
+    The `_ticks` metrics are deterministic (virtual-clock) and gateable;
+    the `_s` metrics are wall clock and informational."""
+    return {
+        "p50_ttft_ticks": percentile(ttft_ticks, 50),
+        "p99_ttft_ticks": percentile(ttft_ticks, 99),
+        "p50_tpot_ticks": percentile(tpot_ticks, 50),
+        "p99_tpot_ticks": percentile(tpot_ticks, 99),
+        "p50_ttft_s": percentile(ttft_s, 50),
+        "p99_ttft_s": percentile(ttft_s, 99),
+        "p50_tpot_s": percentile(tpot_s, 50),
+        "p99_tpot_s": percentile(tpot_s, 99),
+        "mean_queue_depth": (float(np.mean(queue_depth_samples))
+                             if queue_depth_samples else 0.0),
+        "p99_queue_depth": percentile(queue_depth_samples, 99),
+        "max_queue_depth": (int(max(queue_depth_samples))
+                            if queue_depth_samples else 0),
+    }
+
+
+# ------------------------------------------------------------------ router
+
+@dataclasses.dataclass
+class _Replica:
+    idx: int
+    engine: ServeEngine
+    hb: HeartbeatFile
+    watchdog: StepWatchdog
+    alive: bool = True            # router's view: dispatchable
+    killed: bool = False          # fault plan: permanently dead
+    stall_until: int = -1         # frozen through tick stall_until - 1
+    fenced_at: int = -1
+    completed: int = 0
+    evicted: int = 0
+    stalled_ticks: int = 0
+    straggler_events: int = 0
+
+    def healthy_at(self, tick: int) -> bool:
+        """Whether the replica PROCESS runs this tick (steps + beats) —
+        independent of the router's alive/fenced view of it."""
+        return not self.killed and tick >= self.stall_until
+
+    def outstanding(self) -> int:
+        return self.engine.active_count + self.engine.queue_depth
+
+
+class Router:
+    """Load-balance a request trace across N replica ServeEngines.
+
+    Replicas share params (data parallel); each may additionally be
+    tensor-parallel via `mesh=` exactly as a standalone engine would.
+    `rng_seed` is shared so any replica draws the identical per-request
+    sample stream — the property failover correctness rests on.
+
+    Example (tiny model, CPU; see docs/serving.md §Multi-replica
+    DP routing)::
+
+        import jax, repro
+        from repro.configs.base import get_config, reduce_config
+        from repro.serve.router import FaultPlan, Router
+        from repro.serve.trace import TraceConfig, generate_trace
+        cfg = reduce_config(get_config("qwen2-1.5b"), d_model=64, vocab=128)
+        params = repro.build_model(cfg).init_params(jax.random.PRNGKey(0))
+        router = Router(cfg, params, replicas=2, max_batch=2, cache_len=64)
+        trace = generate_trace(TraceConfig(n_requests=6, out_max=8,
+                                           prompt_max=16))
+        out, stats = router.run(trace)
+        assert stats["completed"] == 6
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, replicas: int = 2,
+                 max_batch: int = 4, cache_len: int = 512,
+                 rng_seed: int = 0, mesh=None,
+                 heartbeat_dir: Optional[str] = None,
+                 stale_after_ticks: int = 3,
+                 fault_plan: Optional[FaultPlan] = None,
+                 max_ticks: int = 100_000):
+        if replicas < 1:
+            raise ValueError(f"need at least one replica, got {replicas}")
+        self.cfg = cfg
+        self.max_batch = max_batch
+        self.stale_after_ticks = stale_after_ticks
+        self.fault_plan = fault_plan or FaultPlan()
+        self.max_ticks = max_ticks
+        hb_dir = heartbeat_dir or tempfile.mkdtemp(prefix="repro-router-hb-")
+        self.heartbeat_dir = hb_dir
+        self.replicas: List[_Replica] = []
+        for i in range(replicas):
+            eng = ServeEngine(cfg, params, max_batch=max_batch,
+                              cache_len=cache_len, rng_seed=rng_seed,
+                              mesh=mesh)
+            rep = _Replica(
+                idx=i, engine=eng,
+                hb=HeartbeatFile(hb_dir, name=f"REPLICA_{i}"),
+                watchdog=StepWatchdog())
+            rep.watchdog.on_straggler = (
+                lambda step, dt, ewma, _r=rep: _bump_straggler(_r))
+            self.replicas.append(rep)
+        self.last_stats: Optional[Dict[str, Any]] = None
+
+    # ------------------------------------------------------------- pieces
+
+    def _alive(self) -> List[_Replica]:
+        return [r for r in self.replicas if r.alive]
+
+    def _fence(self, rep: _Replica, tick: int, rq: deque,
+               arrival_tick: Dict[int, int]) -> Tuple[int, int]:
+        """Declare rep dead: evict its in-flight work back onto the router
+        queue (oldest arrivals first, ahead of newer work) and stop
+        dispatching to it forever. Returns (n_requeued, wasted_tokens)."""
+        rep.alive = False
+        rep.fenced_at = tick
+        evicted, wasted = rep.engine.evict_inflight()
+        rep.evicted += len(evicted)
+        evicted.sort(key=lambda r: arrival_tick[r.rid])
+        rq.extendleft(reversed(evicted))
+        return len(evicted), wasted
+
+    # ---------------------------------------------------------------- run
+
+    def run(self, trace: Trace, *, tick_s: float = 0.05
+            ) -> Tuple[Dict[int, List[int]], Dict[str, Any]]:
+        """Drive the trace to completion. Returns ({rid: tokens}, stats).
+
+        tick_s maps the trace's virtual arrival times onto ticks; it has
+        no relation to the wall clock (a tick takes however long the
+        replicas' decode steps take)."""
+        n_req = len(trace.requests)
+        arrivals = deque(zip(trace.arrival_ticks(tick_s),
+                             trace.requests))       # ordered by t_arrival
+        for rep in self.replicas:
+            rep.engine.reset()
+        t_wall0 = time.perf_counter()
+
+        rq: deque = deque()                  # router-level admission queue
+        arrival_tick: Dict[int, int] = {}
+        arrival_wall: Dict[int, float] = {}
+        first_tick: Dict[int, int] = {}      # last successful admission
+        finish_tick: Dict[int, int] = {}
+        done_by: Dict[int, int] = {}         # rid -> replica idx
+        queue_samples: List[int] = []
+        toks_at_tick: List[int] = []         # tokens produced per tick
+        requeued = 0
+        wasted = 0
+        max_outstanding = 0
+        killed: List[int] = []
+        fenced: List[int] = []
+
+        tick = 0
+        while len(done_by) < n_req:
+            if tick >= self.max_ticks:
+                raise RuntimeError(
+                    f"router exceeded max_ticks={self.max_ticks} with "
+                    f"{n_req - len(done_by)} request(s) unfinished")
+
+            # 1. scripted faults take effect before anything runs
+            for ev in self.fault_plan.events_at(tick):
+                rep = self.replicas[ev.replica]
+                if ev.kind == "kill":
+                    rep.killed = True
+                    killed.append(rep.idx)
+                elif ev.kind == "stall":
+                    rep.stall_until = max(rep.stall_until,
+                                          tick + ev.duration)
+                else:
+                    raise ValueError(f"unknown fault kind {ev.kind!r}")
+
+            # 2. trace arrivals whose virtual time has come
+            while arrivals and arrivals[0][0] <= tick:
+                _, tr = arrivals.popleft()
+                rid = tr.request.rid
+                arrival_tick[rid] = tick
+                arrival_wall[rid] = time.perf_counter()
+                rq.append(tr.request)
+
+            # 3. failure detection: fence replicas whose heartbeat tick
+            # lags too far (killed replicas stop beating; stalls longer
+            # than the threshold are indistinguishable from death)
+            for rep in self._alive():
+                beat = rep.hb.read()
+                last = beat["step"] if beat else -1
+                if tick - last > self.stale_after_ticks:
+                    n_rq, n_waste = self._fence(rep, tick, rq,
+                                                arrival_tick)
+                    fenced.append(rep.idx)
+                    requeued += n_rq
+                    wasted += n_waste
+
+            if (rq or arrivals) and not self._alive():
+                raise RuntimeError(
+                    "every replica is dead/fenced with "
+                    f"{len(rq) + len(arrivals)} request(s) still to serve")
+
+            # 4. dispatch least-loaded-first; a replica holds at most
+            # max_batch requests (slots + its own queue), so at most one
+            # batch of in-flight work is lost per fencing
+            while rq:
+                cands = [r for r in self._alive()
+                         if r.outstanding() < self.max_batch]
+                if not cands:
+                    break
+                best = min(cands, key=lambda r: (r.outstanding(), r.idx))
+                req = rq.popleft()
+                best.engine.submit(req, t_enqueue=arrival_wall[req.rid])
+
+            # 5. step every healthy replica (one scheduler round each);
+            # healthy replicas beat their heartbeat with the current tick
+            toks_this_tick = 0
+            for rep in self.replicas:
+                if not rep.healthy_at(tick):
+                    if not rep.killed:
+                        rep.stalled_ticks += 1
+                    continue
+                t0 = time.perf_counter()
+                report = rep.engine.step()
+                dt = time.perf_counter() - t0
+                rep.hb.beat(tick)
+                if report.decoded or report.admitted:
+                    rep.watchdog.observe(tick, dt)
+                toks_this_tick += len(report.admitted) + report.decoded
+                for rid in report.admitted:
+                    first_tick[rid] = tick
+                for rid in report.finished:
+                    finish_tick[rid] = tick
+                    done_by[rid] = rep.idx
+                    rep.completed += 1
+            toks_at_tick.append(toks_this_tick)
+
+            # 6. end-of-tick accounting
+            queue_samples.append(len(rq) + sum(r.engine.queue_depth
+                                               for r in self._alive()))
+            max_outstanding = max(
+                [max_outstanding] + [r.outstanding()
+                                     for r in self.replicas])
+            tick += 1
+
+        wall = time.perf_counter() - t_wall0
+
+        # merge outputs: after the drain each engine's outputs hold
+        # exactly the requests it completed (evicted rids were popped)
+        out: Dict[int, List[int]] = {}
+        per_req: Dict[int, RequestStats] = {}
+        for rep in self.replicas:
+            rep.engine.finalize()
+            out.update(rep.engine.outputs)
+            per_req.update(rep.engine.request_stats)
+        stats = self._aggregate(
+            trace, n_req=n_req, ticks=tick, tick_s=tick_s, wall=wall,
+            out=out, per_req=per_req, arrival_tick=arrival_tick,
+            first_tick=first_tick, finish_tick=finish_tick,
+            queue_samples=queue_samples, toks_at_tick=toks_at_tick,
+            requeued=requeued, wasted=wasted,
+            max_outstanding=max_outstanding, killed=killed, fenced=fenced)
+        self.last_stats = stats
+        return out, stats
+
+    # ---------------------------------------------------------- aggregate
+
+    def _aggregate(self, trace: Trace, *, n_req, ticks, tick_s, wall, out,
+                   per_req, arrival_tick, first_tick, finish_tick,
+                   queue_samples, toks_at_tick, requeued, wasted,
+                   max_outstanding, killed, fenced) -> Dict[str, Any]:
+        ttft_ticks = [first_tick[rid] - arrival_tick[rid]
+                      for rid in first_tick]
+        tpot_ticks = [(finish_tick[rid] - first_tick[rid])
+                      / (len(out[rid]) - 1)
+                      for rid in first_tick if len(out[rid]) > 1]
+        ttft_s = [st.ttft_s for st in per_req.values() if st.new_tokens > 0]
+        tpot_s = [t for t in (request_tpot_s(st) for st in per_req.values())
+                  if t is not None]
+        goodput_toks = sum(len(v) for v in out.values())
+        stats: Dict[str, Any] = {
+            "replicas": len(self.replicas),
+            "ticks": ticks,
+            "tick_s": tick_s,
+            "wall_s": wall,
+            "n_requests": n_req,
+            "completed": len(out),
+            "requeued": requeued,
+            "killed": killed,
+            "fenced": fenced,
+            "decode_steps": sum(r.engine.last_stats["decode_steps"]
+                                for r in self.replicas),
+            "prefills": sum(r.engine.last_stats["prefills"]
+                            for r in self.replicas),
+            "goodput_toks": goodput_toks,
+            "wasted_toks": wasted,
+            "goodput_tok_per_s": goodput_toks / max(wall, 1e-9),
+            "max_outstanding": max_outstanding,
+            "straggler_events": sum(r.straggler_events
+                                    for r in self.replicas),
+        }
+        stats.update(router_slo_summary(ttft_ticks, tpot_ticks, ttft_s,
+                                        tpot_s, queue_samples))
+        bt = trace.burst_ticks(tick_s, ticks)
+        if bt:
+            burst_toks = sum(toks_at_tick[k] for k in bt
+                             if k < len(toks_at_tick))
+            stats["burst"] = {
+                "ticks": len(bt),
+                "arrivals": sum(1 for rid, t in arrival_tick.items()
+                                if t in bt),
+                "new_tokens": burst_toks,
+                "tok_per_tick": burst_toks / len(bt),
+            }
+        stats["per_replica"] = [
+            {"replica": r.idx,
+             "decode_steps": r.engine.last_stats["decode_steps"],
+             "prefills": r.engine.last_stats["prefills"],
+             "completed": r.completed,
+             "evicted": r.evicted,
+             "stalled_ticks": r.stalled_ticks,
+             "straggler_events": r.straggler_events,
+             "killed": r.killed,
+             "fenced": not r.alive}
+            for r in self.replicas]
+        return stats
+
+
+def _bump_straggler(rep: _Replica) -> None:
+    rep.straggler_events += 1

@@ -175,6 +175,46 @@ def test_heartbeat_cross_boot_mono_falls_back_to_wall_clock(tmp_path):
     assert not hb.stale(300.0)
 
 
+def test_heartbeat_same_boot_future_mono_clamps_to_wall_clock(tmp_path):
+    """Regression: a deserialized/hand-restored beat can carry THIS boot's
+    id with a `mono` value ahead of the reader's clock — non-monotonic,
+    impossible for a beat this kernel produced. The watchdog used to let
+    the wall-clock fallback's max(0, ...) clamp such a beat to age 0
+    whenever its wall time was also in the future, making a dead worker
+    read fresh FOREVER. It must clamp to the wall-clock fallback path and
+    read stale when that clock is untrustworthy too."""
+    import json
+    import time as _time
+
+    from repro.dist import fault
+    from repro.dist.fault import HeartbeatFile
+    boot = fault._boot_id()
+    if boot is None:
+        pytest.skip("no boot id: mono is never trusted on this platform")
+    hb = HeartbeatFile(str(tmp_path))
+    # future mono, OLD wall time: falls back to the wall clock -> stale
+    with open(hb.path, "w") as fh:
+        json.dump({"step": 1, "time": _time.time() - 600.0,
+                   "mono": _time.monotonic() + 1e6, "boot": boot}, fh)
+    assert hb.age_s() > 300.0
+    assert hb.stale(300.0)
+    # future mono AND future wall time: wholly untrustworthy -> treated
+    # as never-beaten (the bug: age clamped to 0.0, fresh forever)
+    with open(hb.path, "w") as fh:
+        json.dump({"step": 1, "time": _time.time() + 1e6,
+                   "mono": _time.monotonic() + 1e6, "boot": boot}, fh)
+    assert hb.age_s() is None
+    assert hb.stale(300.0)
+    # beat missing the wall-time field entirely must not crash the poll
+    with open(hb.path, "w") as fh:
+        json.dump({"step": 1, "mono": _time.monotonic() + 1e6,
+                   "boot": boot}, fh)
+    assert hb.age_s() is None and hb.stale(300.0)
+    # a healthy beat still reads fresh through the mono path
+    hb.beat(2)
+    assert hb.age_s() < 60.0 and not hb.stale(60.0)
+
+
 def test_watchdog_flags_straggler_after_warmup():
     from repro.dist.fault import StepWatchdog
     hits = []

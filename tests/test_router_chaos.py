@@ -1,0 +1,155 @@
+"""Router fault-injection (chaos) tier — deterministic by construction.
+
+Every scenario scripts its faults with `FaultPlan` on the router's
+virtual tick clock, so "kill replica 1 mid-decode" is an exact, seeded,
+CPU-reproducible event rather than process murder. The core contract
+under test: a fenced replica's in-flight requests re-queue onto
+survivors and RESTART from scratch, and because sample keys are
+per-request (fold_in(rid, i)) and replicas share rng_seed, the re-served
+tokens are bit-exact against an undisturbed single-engine run — no
+request dropped, none duplicated, partial tokens discarded as waste.
+
+Run by the CI `router-chaos` job alongside tests/test_router_props.py.
+"""
+
+import jax
+import pytest
+
+from repro.configs.base import get_config, reduce_config
+from repro.models.registry import build_model
+from repro.serve.engine import ServeEngine
+from repro.serve.router import FaultPlan, Router
+from repro.serve.trace import TraceConfig, generate_trace
+
+
+# greedy decoding so the bit-exactness claim is about scheduling and
+# sample-key placement, not one lucky temperature draw
+TRACE = TraceConfig(n_requests=10, arrival="poisson", rate_rps=40.0,
+                    prompt_median=4, prompt_sigma=0.4, prompt_max=12,
+                    out_median=6, out_sigma=0.5, out_max=10,
+                    temperatures=(0.0,), vocab=128, seed=11)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def baseline(small):
+    """The undisturbed single-engine run every chaos scenario must
+    reproduce token-for-token."""
+    cfg, params = small
+    trace = generate_trace(TRACE)
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64, rng_seed=0)
+    out = eng.run(trace.plain_requests())
+    return trace, out
+
+
+def _assert_no_drop_no_dup(trace, out):
+    want = sorted(tr.request.rid for tr in trace.requests)
+    assert sorted(out.keys()) == want          # every rid exactly once
+    for tr in trace.requests:
+        assert len(out[tr.request.rid]) == tr.request.max_new_tokens
+
+
+def test_kill_replica_mid_decode_bit_exact(small, baseline, tmp_path):
+    """Kill replica 1 while it holds in-flight work: the router fences
+    it, survivors absorb the re-queued requests, every request completes
+    with tokens identical to the undisturbed baseline."""
+    cfg, params = small
+    trace, base_out = baseline
+    rt = Router(cfg, params, replicas=2, max_batch=2, cache_len=64,
+                rng_seed=0, heartbeat_dir=str(tmp_path),
+                stale_after_ticks=2,
+                fault_plan=FaultPlan().kill(1, at_tick=3))
+    out, stats = rt.run(trace)
+    assert stats["completed"] == TRACE.n_requests
+    assert stats["killed"] == [1] and stats["fenced"] == [1]
+    # the kill landed mid-decode: work was actually lost and re-served
+    assert stats["requeued"] > 0
+    assert stats["wasted_toks"] > 0
+    _assert_no_drop_no_dup(trace, out)
+    assert out == base_out                     # bit-exact failover
+    # the dead replica served nothing to completion after the fence
+    dead = stats["per_replica"][1]
+    assert dead["killed"] and dead["fenced"] and dead["evicted"] > 0
+    assert stats["per_replica"][0]["completed"] + dead["completed"] \
+        == TRACE.n_requests
+
+
+def test_long_stall_gets_fenced_and_completes(small, baseline, tmp_path):
+    """A stall longer than stale_after_ticks is indistinguishable from
+    death: the replica is fenced (and never resurrected, even though the
+    process wakes up) and the run still completes bit-exact."""
+    cfg, params = small
+    trace, base_out = baseline
+    rt = Router(cfg, params, replicas=2, max_batch=2, cache_len=64,
+                rng_seed=0, heartbeat_dir=str(tmp_path),
+                stale_after_ticks=2,
+                fault_plan=FaultPlan().stall(0, at_tick=2, ticks=8))
+    out, stats = rt.run(trace)
+    assert stats["completed"] == TRACE.n_requests
+    assert stats["fenced"] == [0] and stats["killed"] == []
+    _assert_no_drop_no_dup(trace, out)
+    assert out == base_out
+    # no resurrection: everything after the fence lands on replica 1
+    assert stats["per_replica"][1]["completed"] == TRACE.n_requests
+
+
+def test_short_stall_rides_through_without_fencing(small, baseline,
+                                                   tmp_path):
+    """A stall within the staleness budget is a blip, not a failure: no
+    fencing, no re-queue, identical outputs."""
+    cfg, params = small
+    trace, base_out = baseline
+    rt = Router(cfg, params, replicas=2, max_batch=2, cache_len=64,
+                rng_seed=0, heartbeat_dir=str(tmp_path),
+                stale_after_ticks=4,
+                fault_plan=FaultPlan().stall(1, at_tick=2, ticks=2))
+    out, stats = rt.run(trace)
+    assert stats["completed"] == TRACE.n_requests
+    assert stats["fenced"] == [] and stats["requeued"] == 0
+    assert stats["wasted_toks"] == 0
+    assert stats["per_replica"][1]["stalled_ticks"] == 2
+    _assert_no_drop_no_dup(trace, out)
+    assert out == base_out
+
+
+def test_all_replicas_dead_raises(small, tmp_path):
+    """Killing every replica with work outstanding must fail loudly, not
+    hang or silently drop requests."""
+    cfg, params = small
+    trace = generate_trace(TRACE)
+    rt = Router(cfg, params, replicas=2, max_batch=2, cache_len=64,
+                rng_seed=0, heartbeat_dir=str(tmp_path),
+                stale_after_ticks=1,
+                fault_plan=FaultPlan().kill(0, at_tick=1).kill(1, at_tick=1))
+    with pytest.raises(RuntimeError, match="dead/fenced"):
+        rt.run(trace)
+
+
+def test_chaos_run_is_seed_deterministic(small, tmp_path):
+    """The same trace + fault plan reproduces the identical outputs AND
+    the identical tick-denominated stats — the property that lets the
+    bench gate tail latencies across machines."""
+    cfg, params = small
+    trace = generate_trace(TRACE)
+    runs = []
+    for i in range(2):
+        rt = Router(cfg, params, replicas=2, max_batch=2, cache_len=64,
+                    rng_seed=0, heartbeat_dir=str(tmp_path / f"hb{i}"),
+                    stale_after_ticks=2,
+                    fault_plan=FaultPlan().kill(1, at_tick=3))
+        runs.append(rt.run(trace))
+    (out_a, st_a), (out_b, st_b) = runs
+    assert out_a == out_b
+    for k in ("ticks", "requeued", "wasted_toks", "decode_steps",
+              "prefills", "goodput_toks", "p50_ttft_ticks",
+              "p99_ttft_ticks", "p50_tpot_ticks", "p99_tpot_ticks",
+              "max_queue_depth"):
+        assert st_a[k] == st_b[k], k

@@ -1,0 +1,142 @@
+"""Property-based tests for the trace generator and router admission.
+
+Via tests/_prop.py (real hypothesis when installed, seeded sampled
+fallback otherwise). The invariants:
+
+  * trace generation — arrival times strictly monotone, lengths inside
+    the configured clips, rids unique and sequential, and the whole
+    trace a pure function of its seed (per-seed determinism);
+  * router admission — conservation: every request that enters leaves
+    exactly once with exactly max_new_tokens tokens, across random
+    replica counts and fault plans (no drop, no dup, killed replica or
+    not).
+
+Run by the CI `router-chaos` job alongside tests/test_router_chaos.py.
+"""
+
+import functools
+
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+from repro.serve.router import FaultPlan, Router
+from repro.serve.trace import TraceConfig, generate_trace
+
+
+# ------------------------------------------------------- trace generation
+
+def _cfg(seed, arrival, n=12):
+    return TraceConfig(n_requests=n, arrival=arrival, rate_rps=20.0,
+                       burst_every_s=0.3, burst_len_s=0.1,
+                       prompt_median=4, prompt_sigma=0.5, prompt_max=10,
+                       out_median=4, out_sigma=0.6, out_max=8,
+                       temperatures=(0.0, 0.7), vocab=64, seed=seed)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1 << 16),
+       arrival=st.sampled_from(["poisson", "bursty"]))
+def test_trace_invariants(seed, arrival):
+    tr = generate_trace(_cfg(seed, arrival))
+    times = [r.t_arrival for r in tr.requests]
+    assert all(b > a for a, b in zip(times, times[1:]))   # strictly monotone
+    assert times[0] > 0.0
+    assert [r.request.rid for r in tr.requests] == list(range(12))
+    for r in tr.requests:
+        req = r.request
+        assert 1 <= len(req.prompt) <= 10
+        assert 1 <= req.max_new_tokens <= 8
+        assert req.temperature in (0.0, 0.7)
+        assert req.prompt.dtype == np.int32
+        assert 0 <= int(req.prompt.min()) and int(req.prompt.max()) < 64
+    if arrival == "poisson":
+        assert tr.burst_windows == []
+    else:
+        for t0, t1 in tr.burst_windows:
+            assert t1 - t0 == pytest.approx(0.1)
+            assert t0 >= 0.3                  # first period stays calm
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1 << 16),
+       arrival=st.sampled_from(["poisson", "bursty"]))
+def test_trace_per_seed_determinism(seed, arrival):
+    a = generate_trace(_cfg(seed, arrival))
+    b = generate_trace(_cfg(seed, arrival))
+    assert [r.t_arrival for r in a.requests] \
+        == [r.t_arrival for r in b.requests]
+    assert a.burst_windows == b.burst_windows
+    for x, y in zip(a.requests, b.requests):
+        assert x.request.max_new_tokens == y.request.max_new_tokens
+        assert x.request.temperature == y.request.temperature
+        assert np.array_equal(x.request.prompt, y.request.prompt)
+
+
+def test_trace_different_seeds_differ():
+    """Anti-test for the determinism property: the seed must actually
+    steer the draw (guards a frozen-rng regression)."""
+    a = generate_trace(_cfg(0, "poisson"))
+    b = generate_trace(_cfg(1, "poisson"))
+    assert [r.t_arrival for r in a.requests] \
+        != [r.t_arrival for r in b.requests]
+
+
+def test_trace_rejects_unknown_arrival():
+    with pytest.raises(ValueError, match="unknown arrival"):
+        generate_trace(TraceConfig(arrival="flash-crowd"))
+
+
+def test_arrival_ticks_floor_quantization():
+    tr = generate_trace(_cfg(3, "poisson"))
+    ticks = tr.arrival_ticks(0.05)
+    assert ticks == sorted(ticks)
+    for k, r in zip(ticks, tr.requests):
+        assert k * 0.05 <= r.t_arrival < (k + 1) * 0.05
+
+
+# ------------------------------------------------------ router conservation
+
+@functools.lru_cache(maxsize=1)
+def _small_model():
+    # not a fixture: @given-wrapped properties present a zero-arg
+    # signature to pytest, so fixtures can't inject here
+    import jax
+    from repro.configs.base import get_config, reduce_config
+    from repro.models.registry import build_model
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    params = build_model(cfg).init_params(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=1 << 8),
+       replicas=st.sampled_from([1, 2]),
+       inject=st.booleans())
+def test_router_conserves_requests(seed, replicas, inject):
+    """Requests in == requests out, each rid exactly once at full length,
+    for any seed x replica count x (fault | no fault). Kills only make
+    sense with a survivor, so single-replica runs stay fault-free."""
+    cfg, params = _small_model()
+    trace = generate_trace(TraceConfig(
+        n_requests=5, arrival="poisson", rate_rps=30.0,
+        prompt_median=3, prompt_sigma=0.4, prompt_max=8,
+        out_median=3, out_sigma=0.5, out_max=6,
+        temperatures=(0.0,), vocab=128, seed=seed))
+    plan = None
+    if inject and replicas == 2:
+        plan = FaultPlan().kill(1, at_tick=2)
+    rt = Router(cfg, params, replicas=replicas, max_batch=2, cache_len=32,
+                rng_seed=0, stale_after_ticks=2, fault_plan=plan)
+    out, stats = rt.run(trace)
+    assert sorted(out.keys()) == [tr.request.rid for tr in trace.requests]
+    for tr in trace.requests:
+        assert len(out[tr.request.rid]) == tr.request.max_new_tokens
+    assert stats["completed"] == 5 and stats["n_requests"] == 5
+    assert sum(r["completed"] for r in stats["per_replica"]) == 5
+    # conservation of token accounting: goodput counts each request's
+    # full output exactly once, waste only what a fenced replica lost
+    assert stats["goodput_toks"] == sum(len(v) for v in out.values())
+    if plan is None:
+        assert stats["requeued"] == 0 and stats["wasted_toks"] == 0

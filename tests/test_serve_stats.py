@@ -15,7 +15,9 @@ import pytest
 from repro.configs.base import get_config, reduce_config
 from repro.models.registry import build_model
 from repro.serve.engine import (Request, RequestStats, ServeEngine,
-                                aggregate_engine_stats)
+                                aggregate_engine_stats, percentile,
+                                request_tpot_s)
+from repro.serve.router import router_slo_summary
 
 
 def _rs(rid, new_tokens, queue, ttft, steps, total):
@@ -56,6 +58,94 @@ def test_aggregate_empty_and_prefill_only_edges():
                                  slot_steps_active=0, max_batch=4,
                                  wall_s=0.5)
     assert one["occupancy"] == 1.0 and one["new_tokens"] == 1
+
+
+# ------------------------------------------------------ percentile machinery
+
+def test_percentile_edge_cases():
+    """n=1 and all-equal samples degenerate to that value for every q;
+    an empty sample is defined as 0.0; two-point samples interpolate
+    linearly (numpy's default) — hand-computed below."""
+    assert percentile([], 50) == 0.0 and percentile([], 99) == 0.0
+    for q in (0, 50, 99, 100):
+        assert percentile([0.7], q) == pytest.approx(0.7)
+        assert percentile([0.4, 0.4, 0.4], q) == pytest.approx(0.4)
+    # linear interpolation between sorted neighbours: p lands at
+    # index q/100 * (n-1), so [0.3, 0.6] -> p50 = 0.45, p99 = 0.597
+    assert percentile([0.3, 0.6], 50) == pytest.approx(0.45)
+    assert percentile([0.3, 0.6], 99) == pytest.approx(0.597)
+    # order must not matter
+    assert percentile([0.6, 0.3], 99) == pytest.approx(0.597)
+
+
+def test_request_tpot_defined_only_from_two_tokens():
+    """TPOT needs an inter-token gap: new_tokens <= 1 has none (None);
+    otherwise it is (total - ttft) / (new_tokens - 1)."""
+    assert request_tpot_s(_rs(1, 0, 0.0, 0.0, 0, 0.0)) is None
+    assert request_tpot_s(_rs(2, 1, 0.0, 0.2, 0, 0.3)) is None
+    t = request_tpot_s(_rs(3, 5, 0.1, 0.3, 4, 1.1))
+    assert t == pytest.approx((1.1 - 0.3) / 4)
+
+
+def test_aggregate_percentiles_hand_computed_fixture():
+    """The engine p50/p99 rows against a fixture computed by hand:
+    TTFT samples exclude zero-token requests, TPOT samples need >= 2
+    tokens, and a max_new_tokens==1 request contributes to TTFT only."""
+    per_req = {
+        1: _rs(1, 8, 0.1, 0.3, 7, 1.0),    # tpot = 0.7/7 = 0.1
+        2: _rs(2, 4, 0.5, 0.6, 3, 0.9),    # tpot = 0.3/3 = 0.1
+        3: _rs(3, 1, 0.0, 0.2, 0, 0.2),    # ttft sample only
+        4: _rs(4, 0, 0.0, 0.0, 0, 0.0),    # excluded everywhere
+    }
+    e = aggregate_engine_stats(per_req, n_requests=4, n_steps=10,
+                               n_prefills=4, slot_steps_active=10,
+                               max_batch=2, wall_s=2.0)
+    # ttfts = sorted([0.3, 0.6, 0.2]) = [0.2, 0.3, 0.6]
+    assert e["p50_ttft_s"] == pytest.approx(0.3)
+    assert e["p99_ttft_s"] == pytest.approx(0.3 + 0.98 * 0.3)  # 0.594
+    # both tpot samples equal 0.1 -> every percentile is 0.1
+    assert e["p50_tpot_s"] == pytest.approx(0.1)
+    assert e["p99_tpot_s"] == pytest.approx(0.1)
+
+
+def test_aggregate_percentiles_single_request():
+    """n=1: every percentile is that request's own latency."""
+    e = aggregate_engine_stats({9: _rs(9, 3, 0.0, 0.25, 2, 0.85)},
+                               n_requests=1, n_steps=2, n_prefills=1,
+                               slot_steps_active=2, max_batch=1, wall_s=1.0)
+    assert e["p50_ttft_s"] == e["p99_ttft_s"] == pytest.approx(0.25)
+    assert e["p50_tpot_s"] == e["p99_tpot_s"] == pytest.approx(0.3)
+
+
+def test_aggregate_percentiles_no_qualifying_samples():
+    """All requests zero-token (max_new_tokens<1 degenerates): no TTFT or
+    TPOT samples, tails degrade to 0.0 rather than raising."""
+    e = aggregate_engine_stats({1: _rs(1, 0, 0.0, 0.0, 0, 0.0)},
+                               n_requests=1, n_steps=0, n_prefills=0,
+                               slot_steps_active=0, max_batch=2, wall_s=0.1)
+    assert e["p50_ttft_s"] == e["p99_ttft_s"] == 0.0
+    assert e["p50_tpot_s"] == e["p99_tpot_s"] == 0.0
+
+
+def test_router_slo_summary_hand_computed_fixture():
+    """The router's SLO fold against hand-computed numbers, including the
+    empty-sample degradations."""
+    s = router_slo_summary(ttft_ticks=[0, 2], tpot_ticks=[1.0, 1.0],
+                           ttft_s=[0.3, 0.6], tpot_s=[0.1, 0.1],
+                           queue_depth_samples=[0, 1, 3])
+    assert s["p50_ttft_ticks"] == pytest.approx(1.0)
+    assert s["p99_ttft_ticks"] == pytest.approx(1.98)
+    assert s["p50_tpot_ticks"] == s["p99_tpot_ticks"] == pytest.approx(1.0)
+    assert s["p50_ttft_s"] == pytest.approx(0.45)
+    assert s["p99_ttft_s"] == pytest.approx(0.597)
+    assert s["mean_queue_depth"] == pytest.approx(4 / 3)
+    # [0, 1, 3]: p99 at index 1.98 -> 1 + 0.98 * 2 = 2.96
+    assert s["p99_queue_depth"] == pytest.approx(2.96)
+    assert s["max_queue_depth"] == 3
+    empty = router_slo_summary([], [], [], [], [])
+    assert empty["p50_ttft_ticks"] == 0.0
+    assert empty["mean_queue_depth"] == 0.0
+    assert empty["max_queue_depth"] == 0
 
 
 # ------------------------------------------------------- real-run identities

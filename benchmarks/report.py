@@ -68,7 +68,9 @@ SCHEMA = "repro-bench/v1"
 # the metric key; anything matching neither list is informational only.
 LOWER_BETTER = ("us_per_call", "step_s", "modeled_s", "cpu_ms", "compute_s",
                 "memory_s", "measured_us", "gib", "vmem_mib", "bytes",
-                "ttft", "tpot", "queue_depth", "wasted_toks")
+                "ttft", "tpot", "queue_depth", "wasted_toks",
+                "shed", "deadline_miss", "retries_per_request",
+                "recovery_ticks", "brownout")
 HIGHER_BETTER = ("tflops", "pct_vpu_peak", "roofline", "speedup",
                  "goodput", "tok_per_tick")
 # wall-clock metrics are machine-dependent noise across CI hosts: excluded

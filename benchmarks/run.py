@@ -309,7 +309,8 @@ ROUTER_FAULT = None
 
 
 def _parse_fault(spec: str):
-    """'kill:R@T' or 'stall:R@T+D' -> FaultPlan (import-free parse check
+    """'kill:R@T', 'stall:R@T+D', 'recover:R@T', or 'flap:R@T+D' (a
+    kill at T + recover at T+D) -> FaultPlan (import-free parse check
     lives here so argparse errors stay legible)."""
     from repro.serve.router import FaultPlan
     plan = FaultPlan()
@@ -323,11 +324,20 @@ def _parse_fault(spec: str):
                 rep, rest2 = rest.split("@")
                 tick, dur = rest2.split("+")
                 plan.stall(int(rep), at_tick=int(tick), ticks=int(dur))
+            elif kind == "recover":
+                rep, tick = rest.split("@")
+                plan.recover(int(rep), at_tick=int(tick))
+            elif kind == "flap":
+                rep, rest2 = rest.split("@")
+                tick, down = rest2.split("+")
+                plan.flap(int(rep), at_tick=int(tick),
+                          down_ticks=int(down))
             else:
                 raise ValueError(kind)
         except ValueError:
             raise SystemExit(
-                f"--fault expects 'kill:R@T' or 'stall:R@T+D' "
+                f"--fault expects 'kill:R@T', 'stall:R@T+D', "
+                f"'recover:R@T', or 'flap:R@T+D' "
                 f"(comma-separated), got {part!r}")
     return plan
 
@@ -339,12 +349,16 @@ def router():
     goodput-under-burst counts are deterministic — the same trace seed
     schedules identically on every host, so report.py --compare can gate
     tail latency. The _ms mirrors and tok-per-wall-second rates are wall
-    clock (informational; see report.WALLCLOCK)."""
+    clock (informational; see report.WALLCLOCK). Two extra fixed
+    scenarios ride along: router_overload (deadlines + bounded queue +
+    retry backoff + brown-out controller under a hot burst) and
+    router_recovery (goodput and fence->recover gap under a replica
+    flap)."""
     import jax
 
     from repro.configs.base import get_config, reduce_config
     from repro.models.registry import build_model
-    from repro.serve.router import Router
+    from repro.serve.router import OverloadConfig, Router
     from repro.serve.trace import TraceConfig, generate_trace
 
     cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
@@ -395,6 +409,54 @@ def router():
              f"prefills={pr['prefills']};completed={pr['completed']};"
              f"evicted={pr['evicted']};stalled_ticks={pr['stalled_ticks']};"
              f"killed={pr['killed']};fenced={pr['fenced']}")
+
+    # --- overload scenario: a hotter burst mix with per-request deadlines
+    # pushed through a bounded queue, retry backoff, and the windowed
+    # brown-out controller. Every rate below is tick-denominated and
+    # deterministic per seed, so report.py --compare gates them exactly
+    # (docs/serving.md §Overload & recovery).
+    o_trace = generate_trace(TraceConfig(
+        n_requests=24, arrival="bursty", rate_rps=32.0, burst_factor=6.0,
+        burst_every_s=0.5, burst_len_s=0.25, prompt_median=6,
+        prompt_sigma=0.6, prompt_max=24, out_median=8, out_sigma=0.8,
+        out_max=32, temperatures=(0.0, 0.7), vocab=128, seed=0,
+        deadline_median=24, deadline_sigma=0.8, deadline_max=96))
+    ort = Router(cfg, params, replicas=ROUTER_REPLICAS, max_batch=4,
+                 cache_len=64, stale_after_ticks=3, max_queue=4,
+                 retry_budget=2, retry_backoff_base=1, retry_backoff_cap=8,
+                 overload=OverloadConfig(window_ticks=2, queue_high=1,
+                                         queue_low=0))
+    _, so = ort.run(o_trace, tick_s=0.05)
+    _csv("router_overload", None,
+         f"completed={so['completed']};shed={so['shed']};"
+         f"deadline_missed={so['deadline_missed']};"
+         f"shed_rate={so['shed_rate']:.3f};"
+         f"deadline_miss_rate={so['deadline_miss_rate']:.3f};"
+         f"retries_per_request={so['retries_per_request']:.3f};"
+         f"brownout_ticks={so['brownout_ticks']};"
+         f"goodput_toks={so['goodput_toks']};"
+         f"p99_ttft_ticks={so['p99_ttft_ticks']:.2f}")
+
+    # --- recovery scenario: the base trace under a kill->recover flap of
+    # replica 1; goodput-under-flap and the fence->recover gap gate the
+    # recovery path (every completed output stays bit-exact vs an
+    # undisturbed single-engine run — the chaos tier asserts that).
+    from repro.serve.router import FaultPlan
+    r_trace = generate_trace(TraceConfig(
+        n_requests=24, arrival="bursty", rate_rps=16.0, burst_factor=4.0,
+        burst_every_s=1.0, burst_len_s=0.5, prompt_median=6,
+        prompt_sigma=0.6, prompt_max=24, out_median=8, out_sigma=0.8,
+        out_max=32, temperatures=(0.0, 0.7), vocab=128, seed=0))
+    rrt = Router(cfg, params, replicas=ROUTER_REPLICAS, max_batch=4,
+                 cache_len=64, stale_after_ticks=3,
+                 fault_plan=FaultPlan().flap(1, at_tick=6, down_ticks=6))
+    _, sr = rrt.run(r_trace, tick_s=0.05)
+    _csv("router_recovery", None,
+         f"completed={sr['completed']};recoveries={sr['recoveries']};"
+         f"mean_recovery_ticks={sr['mean_recovery_ticks']:.2f};"
+         f"requeued={sr['requeued']};wasted_toks={sr['wasted_toks']};"
+         f"goodput_toks={sr['goodput_toks']};ticks={sr['ticks']};"
+         f"p99_ttft_ticks={sr['p99_ttft_ticks']:.2f}")
 
 
 TABLES = {

@@ -17,8 +17,13 @@ carries a full docstring with a runnable example at its definition —
         Slot-level continuous-batching server; pass mesh= to serve
         tensor-parallel over a repro.dist mesh (docs/serving.md).
     Router(cfg, params, replicas=, fault_plan=) / FaultPlan
-        DP router over N replica engines with heartbeat failover and
-        deterministic fault injection (docs/serving.md §router).
+        DP router over N replica engines with heartbeat failover,
+        deterministic fault injection + recovery (FaultPlan.recover/
+        flap), deadlines, and bounded-queue load shedding with retry
+        backoff (docs/serving.md §router).
+    OverloadConfig(window_ticks=, queue_high=, ttft_p99_high=)
+        Windowed brown-out controller for the Router's admission path
+        (docs/serving.md §Overload & recovery).
     generate_trace(TraceConfig(...))
         Seeded synthetic request traces: Poisson/bursty arrivals,
         heavy-tail length mixes.
@@ -48,6 +53,7 @@ _EXPORTS = {
     "Request": "repro.serve.engine",
     "Router": "repro.serve.router",
     "FaultPlan": "repro.serve.router",
+    "OverloadConfig": "repro.serve.router",
     "TraceConfig": "repro.serve.trace",
     "generate_trace": "repro.serve.trace",
     "build_model": "repro.models.registry",

@@ -21,6 +21,7 @@ from __future__ import annotations
 import json
 import os
 import shutil
+import tempfile
 import threading
 from typing import Any, Dict, Optional, Tuple
 
@@ -98,11 +99,31 @@ class CheckpointManager:
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)                      # atomic visibility
-        with open(os.path.join(self.dir, ".LATEST_tmp"), "w") as fh:
-            fh.write(name)
-        os.replace(os.path.join(self.dir, ".LATEST_tmp"),
-                   os.path.join(self.dir, "LATEST"))
+        self._write_latest(name)
         self._gc()
+
+    def _write_latest(self, name: str):
+        # mkstemp (unique name, same dir => same filesystem) + fsync +
+        # os.replace, mirroring tune/tuner.py: a fixed-name tmp file could
+        # be torn by two concurrent writers, and an unflushed pointer could
+        # survive the rename as an empty/truncated LATEST after a crash.
+        # Readers therefore see either the old pointer or the new one,
+        # never a partial write; latest_step() additionally falls back to
+        # a directory scan for the rename-to-pointer crash window.
+        fd, tmp_ptr = tempfile.mkstemp(dir=self.dir, prefix=".LATEST_",
+                                       suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                fh.write(name)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp_ptr, os.path.join(self.dir, "LATEST"))
+        except BaseException:
+            try:
+                os.remove(tmp_ptr)
+            except FileNotFoundError:
+                pass
+            raise
 
     def _gc(self):
         steps = sorted(d for d in os.listdir(self.dir)
@@ -118,14 +139,37 @@ class CheckpointManager:
     # --------------------------------------------------------------- restore
 
     def latest_step(self) -> Optional[int]:
+        """Newest COMPLETE checkpoint step, or None. Trusts the LATEST
+        pointer when it names a complete step directory, but also scans
+        the directory: a crash in the window between the atomic step_*
+        rename and the pointer update leaves LATEST one step behind (or,
+        on a first save, absent) even though the newer checkpoint is fully
+        on disk — resume must find it."""
+        candidates = []
         latest = os.path.join(self.dir, "LATEST")
-        if not os.path.exists(latest):
-            return None
-        with open(latest) as fh:
-            name = fh.read().strip()
-        if not os.path.isdir(os.path.join(self.dir, name)):
-            return None
-        return int(name.split("_")[1])
+        if os.path.exists(latest):
+            with open(latest) as fh:
+                name = fh.read().strip()
+            if self._complete(name):
+                candidates.append(int(name.split("_")[1]))
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and self._complete(d):
+                candidates.append(int(d.split("_")[1]))
+        return max(candidates) if candidates else None
+
+    def _complete(self, name: str) -> bool:
+        """A step directory is complete iff it was atomically renamed into
+        place with both its files (in-progress .tmp_ dirs never match)."""
+        if not name.startswith("step_"):
+            return False
+        try:
+            int(name.split("_")[1])
+        except (IndexError, ValueError):
+            return False
+        d = os.path.join(self.dir, name)
+        return (os.path.isdir(d)
+                and os.path.exists(os.path.join(d, "manifest.json"))
+                and os.path.exists(os.path.join(d, "data.npz")))
 
     def restore(self, step: Optional[int] = None, *,
                 shardings: Optional[PyTree] = None

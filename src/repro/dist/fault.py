@@ -110,6 +110,34 @@ class HeartbeatFile:
         age = self.age_s()
         return age is None or age > timeout_s
 
+    def clear(self) -> None:
+        """Remove the beat file (idempotent). A supervisor calls this when
+        it hands a worker's identity to a replacement process (rolling
+        restart / replica recovery): the fresh process must not inherit
+        the predecessor's liveness — it reads as never-beaten until its
+        own first beat()."""
+        try:
+            os.remove(self.path)
+        except FileNotFoundError:
+            pass
+
+
+def backoff_ticks(attempt: int, *, base: int = 1, cap: int = 32) -> int:
+    """Deterministic exponential backoff: the delay before retry `attempt`
+    (1-indexed) is base * 2**(attempt-1), capped at `cap`. Pure arithmetic
+    on integers — no jitter, no wall clock — so schedulers built on a
+    virtual tick clock (repro.serve.router) stay seed-reproducible while
+    still spreading re-admission pressure out exponentially.
+
+        >>> [backoff_ticks(k, base=2, cap=12) for k in (1, 2, 3, 4)]
+        [2, 4, 8, 12]
+    """
+    if attempt < 1:
+        raise ValueError(f"attempt is 1-indexed, got {attempt}")
+    if base < 0 or cap < 0:
+        raise ValueError(f"base/cap must be >= 0, got {base}/{cap}")
+    return min(base * (1 << (attempt - 1)), cap)
+
 
 class StepWatchdog:
     """Straggler detection on step wall-clock: alarm when a step exceeds

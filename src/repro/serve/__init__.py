@@ -5,9 +5,11 @@ and the synthetic trace generator.
     compiled decode step (run() to drain, or the stepwise
     submit()/step()/evict_inflight() surface drivers build on).
   * router — Router: DP load balancing over N replica engines with
-    heartbeat failover and a deterministic FaultPlan.
+    heartbeat failover, a deterministic FaultPlan (kill/stall/recover/
+    flap), bounded-queue load shedding with retry backoff, deadlines,
+    and an OverloadConfig brown-out controller.
   * trace  — seeded Poisson/bursty request traces with heavy-tail
-    length mixes.
+    length (and optional deadline) mixes.
 
 See docs/serving.md.
 """
@@ -16,4 +18,5 @@ from repro.serve.engine import (Request, RequestStats, ServeEngine,  # noqa: F40
                                 StepReport, aggregate_engine_stats)
 from repro.serve.trace import (Trace, TraceConfig, TracedRequest,  # noqa: F401
                                generate_trace)
-from repro.serve.router import FaultPlan, Router  # noqa: F401
+from repro.serve.router import (FaultPlan, OverloadConfig,  # noqa: F401
+                                Router)

@@ -54,7 +54,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -557,31 +557,45 @@ class ServeEngine:
                           decoded=int(active.sum()),
                           queue_depth=len(self._queue))
 
-    def evict_inflight(self) -> Tuple[List[Request], int]:
-        """Failover support: pull every unfinished request (occupied slots
-        first, then the waiting queue) OUT of the engine so a router can
-        re-queue them onto surviving replicas. Partial outputs and timing
-        for the evicted rids are discarded — a re-queued request restarts
-        from scratch, and the per-request fold_in(rid, i) sample keys make
-        the restart token-for-token identical to an undisturbed run (the
-        chaos-tier contract). Returns (evicted requests, tokens thrown
-        away). The evicted slots' cache rows need no scrubbing: a freed
-        slot's pos is held (its rows are masked) until the next admission
-        overwrites them."""
+    def evict_inflight(self, rids: Optional[Iterable[int]] = None
+                       ) -> Tuple[List[Request], int]:
+        """Pull unfinished requests (occupied slots first, then the
+        waiting queue) OUT of the engine. Two callers:
+
+          * failover (rids=None): a router fencing a dead replica evicts
+            EVERYTHING so survivors can re-serve it;
+          * targeted eviction (rids={...}): the router's deadline sweep
+            removes exactly the expired requests — batch-mates keep
+            decoding undisturbed (their sample keys are per-request, so
+            their streams cannot shift).
+
+        Partial outputs and timing for the evicted rids are discarded — a
+        re-queued request restarts from scratch, and the per-request
+        fold_in(rid, i) sample keys make the restart token-for-token
+        identical to an undisturbed run (the chaos-tier contract).
+        Returns (evicted requests, tokens thrown away). The evicted
+        slots' cache rows need no scrubbing: a freed slot's pos is held
+        (its rows are masked) until the next admission overwrites them."""
+        target = None if rids is None else set(rids)
         evicted: List[Request] = []
         wasted = 0
         for i, s in enumerate(self._slots):
-            if s is None:
+            if s is None or (target is not None and s.rid not in target):
                 continue
             evicted.append(self._reqs.pop(s.rid))
             wasted += len(self._out.pop(s.rid, []))
             self._t_enq.pop(s.rid, None)
             self._slots[i] = None
+        keep: deque = deque()
         while self._queue:
             r = self._queue.popleft()
+            if target is not None and r.rid not in target:
+                keep.append(r)
+                continue
             evicted.append(self._reqs.pop(r.rid, r))
             wasted += len(self._out.pop(r.rid, []))
             self._t_enq.pop(r.rid, None)
+        self._queue = keep
         self._n_submitted -= len(evicted)
         return evicted, wasted
 

@@ -27,13 +27,21 @@ continuous batching matter. Times are VIRTUAL seconds: the router maps
 them onto scheduler ticks (`Trace.arrival_ticks`), so trace time never
 touches the wall clock and every derived scheduling decision is
 deterministic.
+
+Deadlines (optional): with `deadline_median > 0` every request also draws
+a heavy-tail completion deadline — a slack in ROUTER TICKS after its
+arrival tick (`TracedRequest.deadline_ticks`). The router evicts a
+request that has not completed within its slack and counts it
+`deadline_missed` (docs/serving.md §Overload & recovery). The draw comes
+last in the per-request order, and only when enabled, so pre-deadline
+traces remain bit-identical per seed.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -66,13 +74,29 @@ class TraceConfig:
     temperatures: Tuple[float, ...] = (0.0,)   # sampled per request
     vocab: int = 128
     seed: int = 0
+    # Optional per-request deadlines, denominated directly in ROUTER TICKS
+    # of slack after arrival (independent of the tick_s mapping, so a
+    # trace's deadline pressure is identical at any tick granularity).
+    # deadline_median=0 (the default) disables deadlines entirely — no rng
+    # draw happens, so pre-deadline traces stay bit-identical per seed.
+    # When enabled, each request draws a discrete-lognormal slack
+    # (heavy-tail: a few patient requests among many impatient ones),
+    # clipped to [deadline_min, deadline_max].
+    deadline_median: int = 0          # median slack in ticks; 0 = off
+    deadline_sigma: float = 0.6
+    deadline_min: int = 1
+    deadline_max: int = 10_000
 
 
 @dataclasses.dataclass
 class TracedRequest:
-    """One request plus its virtual arrival time (seconds from t=0)."""
+    """One request plus its virtual arrival time (seconds from t=0) and,
+    optionally, a completion deadline: the request must finish within
+    `deadline_ticks` router ticks of its arrival tick or be evicted and
+    counted `deadline_missed` (None = no deadline)."""
     t_arrival: float
     request: Request
+    deadline_ticks: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -151,10 +175,19 @@ def generate_trace(cfg: TraceConfig) -> Trace:
         n_out = _lognormal_len(rng, cfg.out_median, cfg.out_sigma,
                                cfg.out_max)
         temp = float(rng.choice(np.asarray(cfg.temperatures, np.float64)))
+        # the deadline draw comes LAST and only when enabled, so traces
+        # generated before the knob existed stay bit-identical per seed
+        deadline = None
+        if cfg.deadline_median > 0:
+            deadline = max(cfg.deadline_min,
+                           _lognormal_len(rng, cfg.deadline_median,
+                                          cfg.deadline_sigma,
+                                          cfg.deadline_max))
         reqs.append(TracedRequest(
             t_arrival=t,
             request=Request(rid=rid, prompt=prompt, max_new_tokens=n_out,
-                            temperature=temp)))
+                            temperature=temp),
+            deadline_ticks=deadline))
     windows: List[Tuple[float, float]] = []
     if cfg.arrival == "bursty" and reqs:
         horizon = reqs[-1].t_arrival

@@ -108,6 +108,37 @@ def test_heartbeat_roundtrip(tmp_path):
     assert hb.age_s() < 60.0
 
 
+def test_heartbeat_clear_resets_liveness(tmp_path):
+    """clear() hands the identity to a replacement process: the file is
+    gone (reads as never-beaten / stale) and clearing twice is a no-op —
+    the recovery path in serve/router.py relies on both."""
+    from repro.dist.fault import HeartbeatFile
+    hb = HeartbeatFile(str(tmp_path))
+    hb.beat(5)
+    assert hb.read() is not None
+    hb.clear()
+    assert hb.read() is None and hb.stale(1e9)
+    hb.clear()                                 # idempotent on a missing file
+    hb.beat(6)                                 # the replacement's first beat
+    assert hb.read()["step"] == 6
+
+
+def test_backoff_ticks_deterministic_exponential():
+    """base * 2**(attempt-1), capped — pure integer arithmetic, so the
+    router's retry schedule is a function of the attempt count alone."""
+    from repro.dist.fault import backoff_ticks
+    assert [backoff_ticks(k) for k in (1, 2, 3, 4, 5, 6)] \
+        == [1, 2, 4, 8, 16, 32]
+    assert [backoff_ticks(k, base=2, cap=12) for k in (1, 2, 3, 4)] \
+        == [2, 4, 8, 12]
+    assert backoff_ticks(60, base=3, cap=17) == 17   # no overflow blowup
+    assert backoff_ticks(1, base=0) == 0             # immediate retry
+    with pytest.raises(ValueError):
+        backoff_ticks(0)
+    with pytest.raises(ValueError):
+        backoff_ticks(1, base=-1)
+
+
 def test_heartbeat_staleness_survives_wall_clock_skew(tmp_path, monkeypatch):
     """NTP can step the wall clock in either direction between a beat and a
     supervisor poll; staleness math must run on CLOCK_MONOTONIC (shared by

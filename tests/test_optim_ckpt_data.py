@@ -127,6 +127,47 @@ def test_checkpoint_no_partial_visibility(tmp_path):
     assert mgr.latest_step() == 1
 
 
+def test_checkpoint_latest_survives_crash_before_pointer(tmp_path):
+    """A kill in the window between the atomic step_* rename and the
+    LATEST pointer update must not lose the newer checkpoint: the step
+    dir is complete on disk, so latest_step() finds it by scan even
+    though the pointer still names the previous step."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.zeros(1)}, blocking=True)
+    mgr.save(2, {"x": jnp.ones(1)}, blocking=True)
+    # simulate the crash window: rewind LATEST to the previous step
+    with open(os.path.join(tmp_path, "LATEST"), "w") as fh:
+        fh.write("step_00000001")
+    assert mgr.latest_step() == 2
+    step, t = mgr.restore()
+    assert step == 2 and float(t["x"][0]) == 1.0
+    # first-save variant: checkpoint complete, pointer never written
+    os.remove(os.path.join(tmp_path, "LATEST"))
+    assert mgr.latest_step() == 2
+
+
+def test_checkpoint_latest_pointer_never_torn(tmp_path):
+    """The pointer write is mkstemp + atomic replace (the tune/tuner.py
+    discipline): a truncated/garbage LATEST — the artifact of the old
+    fixed-name tmp write dying mid-write — must never be trusted, and no
+    fixed-name tmp file is used (concurrent writers cannot tear it)."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"x": jnp.zeros(1)}, blocking=True)
+    with open(os.path.join(tmp_path, "LATEST")) as fh:
+        assert fh.read() == "step_00000003"
+    # no .LATEST_* tmp droppings survive a clean save
+    assert [f for f in os.listdir(tmp_path)
+            if f.startswith(".LATEST_")] == []
+    # a torn pointer (crash mid-write in the legacy scheme) falls back
+    # to the scan instead of crashing or returning None
+    with open(os.path.join(tmp_path, "LATEST"), "w") as fh:
+        fh.write("step_000")                   # truncated garbage
+    assert mgr.latest_step() == 3
+    with open(os.path.join(tmp_path, "LATEST"), "w") as fh:
+        fh.write("")                           # empty
+    assert mgr.latest_step() == 3
+
+
 # ---------------------------------------------------------------------- data
 
 def test_data_determinism_and_shapes():

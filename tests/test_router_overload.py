@@ -1,0 +1,315 @@
+"""Router overload-and-recovery tier — deadlines, bounded-queue load
+shedding, retry backoff, brown-out, and replica recovery, all on the
+deterministic tick clock (docs/serving.md §Overload & recovery).
+
+The contract under test: every trace request reaches EXACTLY ONE terminal
+outcome (completed | shed | deadline_missed), no duplicates or
+resurrections across repeated kill->recover cycles, completed outputs
+stay bit-exact vs an undisturbed single-engine run at temperature 0, and
+the whole run — including shed/miss/retry counts — is run-to-run
+deterministic per seed.
+
+Run by the CI `router-chaos` job alongside tests/test_router_chaos.py.
+"""
+
+import jax
+import pytest
+
+from repro.configs.base import get_config, reduce_config
+from repro.models.registry import build_model
+from repro.serve.engine import ServeEngine
+from repro.serve.router import (FaultEvent, FaultPlan, OverloadConfig,
+                                Router)
+from repro.serve.trace import TraceConfig, generate_trace
+
+TRACE = TraceConfig(n_requests=10, arrival="poisson", rate_rps=40.0,
+                    prompt_median=4, prompt_sigma=0.4, prompt_max=12,
+                    out_median=6, out_sigma=0.5, out_max=10,
+                    temperatures=(0.0,), vocab=128, seed=11)
+
+# hotter mix for the overload scenarios: arrivals outpace 2x2 slots
+HOT = TraceConfig(n_requests=14, arrival="bursty", rate_rps=48.0,
+                  burst_factor=6.0, burst_every_s=0.25, burst_len_s=0.15,
+                  prompt_median=4, prompt_sigma=0.4, prompt_max=12,
+                  out_median=8, out_sigma=0.5, out_max=16,
+                  temperatures=(0.0,), vocab=128, seed=7)
+
+
+@pytest.fixture(scope="module")
+def small():
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _router(small, tmp_path, **kw):
+    cfg, params = small
+    kw.setdefault("replicas", 2)
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("cache_len", 64)
+    kw.setdefault("rng_seed", 0)
+    kw.setdefault("heartbeat_dir", str(tmp_path))
+    return Router(cfg, params, **kw)
+
+
+def _assert_conserved(trace, out, stats):
+    """Every request exactly one terminal outcome; outputs exist exactly
+    for the completed ones, full-length, no duplicates."""
+    rids = sorted(tr.request.rid for tr in trace.requests)
+    assert sorted(stats["outcomes"]) == rids
+    assert set(stats["outcomes"].values()) <= {
+        "completed", "shed", "deadline_missed"}
+    done = sorted(r for r, s in stats["outcomes"].items()
+                  if s == "completed")
+    assert sorted(out) == done
+    assert stats["completed"] + stats["shed"] + stats["deadline_missed"] \
+        == len(rids)
+    by_rid = {tr.request.rid: tr.request for tr in trace.requests}
+    for rid in done:
+        assert len(out[rid]) == by_rid[rid].max_new_tokens
+
+
+# ------------------------------------------------------------- fault plan
+
+def test_events_at_same_tick_insertion_order():
+    """Same-tick events apply in the order the plan author wrote them —
+    kill-then-recover leaves the replica alive, recover-then-kill leaves
+    it dead, and neither depends on list/dict accidents."""
+    p = FaultPlan().kill(0, at_tick=5).recover(0, at_tick=5)
+    assert [e.kind for e in p.events_at(5)] == ["kill", "recover"]
+    q = FaultPlan().recover(0, at_tick=5).kill(0, at_tick=5)
+    assert [e.kind for e in q.events_at(5)] == ["recover", "kill"]
+    # pre-built event lists get sequenced on construction too
+    r = FaultPlan([FaultEvent(tick=3, replica=1, kind="stall", duration=2),
+                   FaultEvent(tick=3, replica=0, kind="kill")])
+    assert [(e.kind, e.replica) for e in r.events_at(3)] \
+        == [("stall", 1), ("kill", 0)]
+    assert [e.seq for e in r.events_at(3)] == [0, 1]
+
+
+def test_flap_builds_kill_recover_cycles():
+    p = FaultPlan().flap(1, at_tick=6, down_ticks=4, times=2)
+    kinds = [(e.tick, e.kind) for e in sorted(p.events, key=lambda e: e.seq)]
+    assert kinds == [(6, "kill"), (10, "recover"),
+                     (14, "kill"), (18, "recover")]
+    assert p.has_recovery_after(10) and not p.has_recovery_after(18)
+    with pytest.raises(ValueError):
+        FaultPlan().flap(0, at_tick=0, down_ticks=0)
+    with pytest.raises(ValueError):
+        FaultPlan().flap(0, at_tick=0, down_ticks=4, times=2, period=3)
+
+
+# --------------------------------------------------------------- deadlines
+
+def test_deadlines_evict_and_are_terminal(small, tmp_path):
+    """Tight heavy-tail deadlines under load: some requests miss, each
+    missed request is terminal (evicted from queue or mid-flight), and
+    the rest complete normally."""
+    trace = generate_trace(TraceConfig(
+        **{**HOT.__dict__, "deadline_median": 8, "deadline_sigma": 0.8,
+           "deadline_max": 40}))
+    assert any(tr.deadline_ticks is not None for tr in trace.requests)
+    rt = _router(small, tmp_path)
+    out, stats = rt.run(trace)
+    _assert_conserved(trace, out, stats)
+    assert stats["deadline_missed"] > 0 and stats["completed"] > 0
+    assert stats["shed"] == 0                  # no queue bound configured
+    assert stats["deadline_miss_rate"] == \
+        stats["deadline_missed"] / HOT.n_requests
+
+
+def test_no_deadline_trace_is_unchanged_per_seed():
+    """The deadline knob draws LAST and only when enabled: disabled
+    configs generate bit-identical traces to the pre-knob generator."""
+    a = generate_trace(TRACE)
+    b = generate_trace(TRACE)
+    assert all(tr.deadline_ticks is None for tr in a.requests)
+    assert [tr.t_arrival for tr in a.requests] \
+        == [tr.t_arrival for tr in b.requests]
+    assert [tr.request.max_new_tokens for tr in a.requests] \
+        == [tr.request.max_new_tokens for tr in b.requests]
+
+
+# -------------------------------------------------- shedding + retry + brownout
+
+def test_bounded_queue_sheds_with_retry_backoff(small, tmp_path):
+    """A full bounded queue sheds; shed requests re-enter via exponential
+    backoff until the budget runs out, then are terminally shed."""
+    trace = generate_trace(HOT)
+    rt = _router(small, tmp_path, max_queue=2, retry_budget=1)
+    out, stats = rt.run(trace)
+    _assert_conserved(trace, out, stats)
+    assert stats["shed"] > 0 and stats["completed"] > 0
+    assert stats["retries"] > 0                # backoff path exercised
+    # every admission rejection either scheduled a retry or was terminal
+    assert stats["shed_events"] == stats["retries"] + stats["shed"]
+    assert stats["shed_rate"] == stats["shed"] / HOT.n_requests
+
+
+def test_retry_budget_zero_sheds_immediately(small, tmp_path):
+    trace = generate_trace(HOT)
+    rt = _router(small, tmp_path, max_queue=0, retry_budget=0)
+    out, stats = rt.run(trace)
+    _assert_conserved(trace, out, stats)
+    assert out == {} and stats["shed"] == HOT.n_requests
+    assert stats["retries"] == 0
+    # zero-completed run: SLO summaries are well-defined zeros
+    assert stats["p99_ttft_ticks"] == 0.0
+    assert stats["p50_tpot_ticks"] == 0.0
+    assert stats["goodput_toks"] == 0
+
+
+def test_shed_policy_reject_oldest(small, tmp_path):
+    """reject-oldest sheds the queue head to admit the newcomer; both
+    policies conserve requests but pick deterministic, different
+    victims."""
+    trace = generate_trace(HOT)
+    _, st_new = _router(small, tmp_path / "a", max_queue=1,
+                        retry_budget=0).run(trace)
+    _, st_old = _router(small, tmp_path / "b", max_queue=1,
+                        retry_budget=0, shed_policy="reject-oldest"
+                        ).run(trace)
+    for st in (st_new, st_old):
+        assert st["completed"] + st["shed"] == HOT.n_requests
+    shed_new = {r for r, s in st_new["outcomes"].items() if s == "shed"}
+    shed_old = {r for r, s in st_old["outcomes"].items() if s == "shed"}
+    assert shed_new and shed_old and shed_new != shed_old
+    with pytest.raises(ValueError, match="shed_policy"):
+        Router(None, None, shed_policy="drop-random")
+
+
+def test_brownout_trips_and_restores(small, tmp_path):
+    """Sustained queue depth trips the brown-out (admissions shed while
+    it holds), and draining to queue_low restores admissions — later
+    arrivals complete."""
+    trace = generate_trace(HOT)
+    rt = _router(small, tmp_path, retry_budget=0,
+                 overload=OverloadConfig(window_ticks=2, queue_high=1,
+                                         queue_low=0))
+    out, stats = rt.run(trace)
+    _assert_conserved(trace, out, stats)
+    assert stats["brownouts"] >= 1
+    assert stats["brownout_ticks"] >= 1
+    assert stats["shed"] > 0                   # brown-out actually shed
+    assert stats["completed"] > 0              # ...and then restored
+
+
+# ---------------------------------------------------------------- recovery
+
+def test_recover_rejoins_dispatch_and_completes(small, tmp_path):
+    """Kill -> fence -> recover: the replica rebuilds fresh engine state,
+    beats again, rejoins least-loaded dispatch, and serves requests to
+    completion — outputs bit-exact vs the undisturbed single engine."""
+    cfg, params = small
+    trace = generate_trace(TRACE)
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64, rng_seed=0)
+    base = eng.run(trace.plain_requests())
+    rt = _router(small, tmp_path, stale_after_ticks=2,
+                 fault_plan=FaultPlan().kill(1, at_tick=3)
+                                       .recover(1, at_tick=8))
+    out, stats = rt.run(trace)
+    _assert_conserved(trace, out, stats)
+    assert stats["completed"] == TRACE.n_requests
+    assert out == base
+    assert stats["recoveries"] == 1 and stats["recovered"] == [1]
+    assert stats["fenced"] == [1]
+    # the kill lands at 3, the fence once the beat goes stale, the
+    # recover at 8: the fence->recover gap is positive and recorded
+    assert stats["recovery_ticks"] and stats["mean_recovery_ticks"] > 0
+    rep1 = stats["per_replica"][1]
+    assert rep1["recoveries"] == 1
+    assert not rep1["killed"] and not rep1["fenced"]
+    # the recovered replica actually served work after rejoining
+    assert rep1["completed"] > 0 or rep1["prefills"] > 0
+
+
+def test_repeated_flap_is_idempotent(small, tmp_path):
+    """Two kill->recover cycles: fencing and recovery are idempotent, no
+    request is dropped, duplicated, or resurrected, outputs stay
+    bit-exact."""
+    cfg, params = small
+    trace = generate_trace(TRACE)
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64, rng_seed=0)
+    base = eng.run(trace.plain_requests())
+    rt = _router(small, tmp_path, stale_after_ticks=2,
+                 fault_plan=FaultPlan().flap(1, at_tick=3, down_ticks=5,
+                                             times=2))
+    out, stats = rt.run(trace)
+    _assert_conserved(trace, out, stats)
+    assert stats["completed"] == TRACE.n_requests
+    assert out == base
+    assert stats["recoveries"] == 2
+    assert stats["per_replica"][1]["recoveries"] == 2
+
+
+def test_all_dead_waits_for_scheduled_recovery(small, tmp_path):
+    """With every replica dead but a recovery scheduled, the router ticks
+    toward it instead of raising — and still completes everything."""
+    trace = generate_trace(TRACE)
+    rt = _router(small, tmp_path, stale_after_ticks=1,
+                 fault_plan=FaultPlan().kill(0, at_tick=1)
+                                       .kill(1, at_tick=1)
+                                       .recover(0, at_tick=6))
+    out, stats = rt.run(trace)
+    _assert_conserved(trace, out, stats)
+    assert stats["completed"] == TRACE.n_requests
+    assert stats["per_replica"][0]["completed"] == TRACE.n_requests
+
+
+def test_all_dead_without_recovery_still_raises(small, tmp_path):
+    trace = generate_trace(TRACE)
+    rt = _router(small, tmp_path, stale_after_ticks=1,
+                 fault_plan=FaultPlan().kill(0, at_tick=1)
+                                       .kill(1, at_tick=1))
+    with pytest.raises(RuntimeError, match="dead/fenced"):
+        rt.run(trace)
+
+
+# ------------------------------------------------------- acceptance chaos
+
+def _chaos_router(small, hb_dir):
+    return _router(small, hb_dir, stale_after_ticks=2, max_queue=3,
+                   retry_budget=1,
+                   fault_plan=FaultPlan().flap(1, at_tick=4, down_ticks=4,
+                                               times=2))
+
+
+def test_burst_plus_flap_conservation_acceptance(small, tmp_path):
+    """The PR's acceptance scenario: a deadline-carrying burst trace
+    through a bounded queue while replica 1 flaps twice. Every request
+    reaches exactly one terminal outcome, nothing duplicates or
+    resurrects across the kill->recover cycles, completed outputs are
+    bit-exact vs the undisturbed single-engine baseline at temperature 0,
+    and the entire run — outcomes, shed/miss/retry counts, ticks — is
+    run-to-run deterministic per seed."""
+    cfg, params = small
+    trace = generate_trace(TraceConfig(
+        **{**HOT.__dict__, "deadline_median": 20, "deadline_sigma": 0.8,
+           "deadline_max": 80}))
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64, rng_seed=0)
+    base = eng.run(trace.plain_requests())
+
+    runs = []
+    for i in range(2):
+        rt = _chaos_router(small, tmp_path / f"hb{i}")
+        runs.append(rt.run(trace))
+    (out_a, st_a), (out_b, st_b) = runs
+
+    _assert_conserved(trace, out_a, st_a)
+    assert st_a["completed"] > 0
+    assert st_a["recoveries"] == 2             # both flap cycles recovered
+    for rid, toks in out_a.items():            # bit-exact completed set
+        assert toks == base[rid], rid
+
+    # run-to-run determinism, including every overload counter
+    assert out_a == out_b
+    assert st_a["outcomes"] == st_b["outcomes"]
+    for k in ("ticks", "requeued", "wasted_toks", "decode_steps",
+              "prefills", "goodput_toks", "shed", "deadline_missed",
+              "shed_events", "retries", "recoveries", "recovery_ticks",
+              "brownouts", "brownout_ticks", "p50_ttft_ticks",
+              "p99_ttft_ticks", "p50_tpot_ticks", "p99_tpot_ticks",
+              "max_queue_depth"):
+        assert st_a[k] == st_b[k], k

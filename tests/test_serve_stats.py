@@ -148,6 +148,36 @@ def test_router_slo_summary_hand_computed_fixture():
     assert empty["max_queue_depth"] == 0
 
 
+def test_router_slo_summary_zero_completed_run():
+    """An all-shed / all-deadline-missed run completes ZERO requests:
+    every latency list is empty while queue depths were still sampled.
+    All percentiles must be well-defined zeros (no empty-percentile
+    crash) and the depth stats still reflect the samples."""
+    s = router_slo_summary([], [], [], [], [0, 2, 2, 1, 0])
+    for k in ("p50_ttft_ticks", "p99_ttft_ticks", "p50_tpot_ticks",
+              "p99_tpot_ticks", "p50_ttft_s", "p99_ttft_s",
+              "p50_tpot_s", "p99_tpot_s"):
+        assert s[k] == 0.0, k
+    assert s["mean_queue_depth"] == pytest.approx(1.0)
+    assert s["max_queue_depth"] == 2
+
+
+def test_aggregate_engine_stats_zero_completed():
+    """Submitted-but-never-finished work (everything evicted or shed):
+    per_req is empty yet counters may be nonzero. Means and tails must be
+    0.0, occupancy stays defined, and no division explodes — including
+    the wall_s=0 edge."""
+    e = aggregate_engine_stats({}, n_requests=4, n_steps=3, n_prefills=2,
+                               slot_steps_active=5, max_batch=2,
+                               wall_s=0.0)
+    assert e["requests"] == 4 and e["new_tokens"] == 0
+    assert e["p50_ttft_s"] == e["p99_ttft_s"] == 0.0
+    assert e["p50_tpot_s"] == e["p99_tpot_s"] == 0.0
+    assert e["mean_queue_wait_s"] == e["mean_ttft_s"] == 0.0
+    assert e["occupancy"] == pytest.approx(5 / 6)
+    assert e["tok_per_s"] == 0.0               # 0 tokens over ~0 wall
+
+
 # ------------------------------------------------------- real-run identities
 
 @pytest.fixture(scope="module")

@@ -31,6 +31,11 @@ carries a full docstring with a runnable example at its definition —
         The paper's Table I, v0-v10, on the modeled v5e roofline.
     tune_kernel(kernel, key)
         Model-then-measure autotuner; winners persist to the JSON cache.
+    audit_registry(kernels=None)
+        Static kernel auditor: jaxpr census + rule catalog over every
+        registered (kernel, version, canonical shape) — no execution
+        (docs/analysis.md; `python -m repro.analyze --strict` is the CI
+        gate, `python -m repro.tune validate|prune` the cache hygiene).
 
     import repro
     repro.list_kernels()                       # ['flash', 'gpp', 'ssm']
@@ -59,6 +64,7 @@ _EXPORTS = {
     "build_model": "repro.models.registry",
     "run_journey": "repro.core.journey",
     "tune_kernel": "repro.tune.tuner",
+    "audit_registry": "repro.analyze.rules",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -1,0 +1,64 @@
+"""repro.analyze: registry-wide static kernel auditor (docs/analysis.md).
+
+The paper's whole method is artifact-driven: every one of the 8 steps starts
+from a profiler census and a roofline position, never from intuition. This
+subsystem is that discipline as a pre-merge gate — it lowers every
+registered `(kernel, version, problem shape)` to jaxpr **without executing
+anything**, produces a per-kernel static census (FLOPs, FMA-pairable
+fraction, bytes per memory level, arithmetic intensity, Pallas VMEM working
+set), and runs a findings engine with stable rule IDs over the result:
+
+    VMEM001   config VMEM working set over the hardware budget   (error)
+    BLK001    clamped config cannot tile the problem dims        (error)
+    DTYPE001  float dtype outside the kernel's declared set      (error)
+    DUP001    duplicate (CSE-able) expensive computations        (warning)
+    CACHE001  stale tuned-config cache entry                     (error)
+    MODEL001  declared model_step_s below the census bound       (error)
+
+Layers:
+    hlo     — the HLO-text parsing layer (shared with core.roofline; the
+              former core/hlo_analysis.py)
+    census  — jaxpr walker: KernelCensus per (kernel, version, key)
+    rules   — Finding engine: audit_kernel / audit_registry / RULES
+
+CLI: `python -m repro.analyze [--strict] [--json out.json]` — the
+`static-analysis` CI job runs this over the full registry and fails on any
+error-severity finding.
+
+Example::
+
+    from repro import analyze
+    report = analyze.audit_registry()
+    [f.rule for f in report.findings if f.severity == "error"]   # []
+"""
+
+from __future__ import annotations
+
+_EXPORTS = {
+    "KernelCensus": "repro.analyze.census",
+    "census_kernel": "repro.analyze.census",
+    "Finding": "repro.analyze.rules",
+    "RULES": "repro.analyze.rules",
+    "AuditReport": "repro.analyze.rules",
+    "audit_kernel": "repro.analyze.rules",
+    "audit_registry": "repro.analyze.rules",
+    "audit_tune_cache": "repro.analyze.rules",
+}
+
+__all__ = sorted(set(_EXPORTS) | {"hlo"})
+
+
+def __getattr__(name: str):
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.analyze' has no attribute "
+                             f"{name!r}") from None
+    import importlib
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

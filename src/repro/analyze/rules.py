@@ -1,0 +1,199 @@
+"""Findings engine for the static kernel auditor (docs/analysis.md §Rules).
+
+Each rule has a stable ID and severity; `--strict` (the CI lint gate) fails
+on any `error`-severity finding:
+
+  VMEM001  error    config VMEM working set exceeds the hw budget
+  BLK001   error    clamped config still cannot tile the problem dims
+  DTYPE001 error    traced jaxpr touches a float dtype outside the
+                    version's declared compute-path dtypes (promotion leak)
+  DUP001   warning  >= DUP_FRACTION of census FLOPs recompute identical
+                    expensive equations (CSE/remat waste)
+  CACHE001 error    tune-cache entry is stale: kernel/version gone, config
+                    unparseable, or config outside the current space
+  MODEL001 error    declared model_step_s below DRIFT_TOL x the
+                    census-derived roofline bound (model drift: the model
+                    promises more than the hardware ceilings allow)
+
+Adding a rule: give it an ID here in `RULES`, emit `Finding`s from
+`audit_kernel` (per-kernel rules) or a new collector wired into
+`audit_registry`, and document it in docs/analysis.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.analyze.census import KernelCensus, census_kernel, resolve_config
+from repro.core.hw import TPU_V5E
+
+SEV_ERROR = "error"
+SEV_WARNING = "warning"
+
+RULES: Dict[str, Tuple[str, str]] = {
+    "VMEM001": (SEV_ERROR, "config VMEM working set exceeds budget"),
+    "BLK001": (SEV_ERROR, "block config cannot tile problem dims"),
+    "DTYPE001": (SEV_ERROR, "float dtype outside declared compute path"),
+    "DUP001": (SEV_WARNING, "duplicate expensive computation"),
+    "CACHE001": (SEV_ERROR, "stale tuned-config cache entry"),
+    "MODEL001": (SEV_ERROR, "model drift vs census roofline bound"),
+}
+
+# DUP001 fires when recomputed FLOPs exceed this fraction of the census
+DUP_FRACTION = 0.10
+# MODEL001 fires when model_step_s < DRIFT_TOL * bound_s. The census is an
+# upper estimate (cond counts its most expensive branch), so the tolerance
+# is generous; only a model promising to beat the hardware ceilings by
+# >2.5x is drift. No upper-bound check: models legitimately sit far above
+# the bound (lane under-fill, grid overhead).
+DRIFT_TOL = 0.4
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One audit finding, addressable by stable rule ID."""
+    rule: str
+    severity: str
+    kernel: str
+    version: str
+    key_dims: str
+    message: str
+    data: Tuple[Tuple[str, Any], ...] = ()
+
+    def row(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["data"] = dict(self.data)
+        return d
+
+
+def _finding(rule: str, kernel: str, version: str, key_dims: str,
+             message: str, **data) -> Finding:
+    sev, _ = RULES[rule]
+    return Finding(rule=rule, severity=sev, kernel=kernel, version=version,
+                   key_dims=key_dims, message=message,
+                   data=tuple(sorted(data.items())))
+
+
+def audit_kernel(kernel, version: str, key, *, hw=TPU_V5E
+                 ) -> Tuple[KernelCensus, List[Finding]]:
+    """Census one `(kernel, version, key)` and run every per-kernel rule
+    against it. Returns the census plus findings (possibly empty)."""
+    from repro.kernels import api
+    k = api.get_kernel(kernel) if isinstance(kernel, str) else kernel
+    census = census_kernel(k, version, key)
+    kd = census.key_dims
+    findings: List[Finding] = []
+
+    cfg = resolve_config(k, version, key)
+    if cfg is not None:
+        clamped = k.clamp(cfg, key)
+        vmem = k.config_vmem_bytes(clamped, key)
+        if vmem is not None and vmem > hw.vmem_bytes:
+            findings.append(_finding(
+                "VMEM001", k.name, version, kd,
+                f"config needs {vmem} B VMEM > budget {hw.vmem_bytes} B",
+                vmem_bytes=vmem, budget_bytes=hw.vmem_bytes))
+        for violation in k.config_divides(clamped, key):
+            findings.append(_finding(
+                "BLK001", k.name, version, kd,
+                f"clamped config cannot tile problem: {violation}"))
+
+    allowed = k.allowed_float_dtypes(version)
+    if allowed:
+        leaked = sorted(set(census.float_dtypes) - set(allowed))
+        if leaked:
+            findings.append(_finding(
+                "DTYPE001", k.name, version, kd,
+                f"jaxpr touches {leaked} outside declared "
+                f"{sorted(allowed)}", leaked=leaked))
+
+    if (census.flops > 0 and census.duplicate_eqns > 0
+            and census.duplicate_flops / census.flops > DUP_FRACTION):
+        frac = census.duplicate_flops / census.flops
+        findings.append(_finding(
+            "DUP001", k.name, version, kd,
+            f"{census.duplicate_eqns} duplicate eqns recompute "
+            f"{100 * frac:.0f}% of census FLOPs",
+            duplicate_eqns=census.duplicate_eqns,
+            duplicate_flops=census.duplicate_flops))
+
+    if census.model_s is not None and census.bound_s > 0 \
+            and census.model_s < DRIFT_TOL * census.bound_s:
+        findings.append(_finding(
+            "MODEL001", k.name, version, kd,
+            f"model_step_s {census.model_s:.3g}s < {DRIFT_TOL} x census "
+            f"roofline bound {census.bound_s:.3g}s",
+            model_s=census.model_s, bound_s=census.bound_s,
+            ratio=census.model_s / census.bound_s))
+
+    return census, findings
+
+
+def audit_tune_cache(cache_dir: Optional[str] = None) -> List[Finding]:
+    """CACHE001 over the tuned-config cache, via the read-only half of the
+    `repro.tune` hygiene tooling (`cache_tools.validate_cache`)."""
+    from repro.tune import cache_tools
+    out = []
+    for issue in cache_tools.validate_cache(cache_dir):
+        out.append(_finding(
+            "CACHE001", issue.kernel or "?", issue.version or "?",
+            issue.dims or "?",
+            f"stale cache entry {issue.key!r}: {issue.detail}",
+            cache_key=issue.key, reason=issue.reason))
+    return out
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """The full registry audit: every census row + every finding."""
+    censuses: List[KernelCensus]
+    findings: List[Finding]
+
+    @property
+    def errors(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == SEV_ERROR]
+
+    @property
+    def warnings(self) -> List[Finding]:
+        return [f for f in self.findings if f.severity == SEV_WARNING]
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "schema": "repro-analyze/v1",
+            "rules": {rid: {"severity": sev, "title": title}
+                      for rid, (sev, title) in RULES.items()},
+            "censuses": [c.row() for c in self.censuses],
+            "findings": [f.row() for f in self.findings],
+            "n_errors": len(self.errors),
+            "n_warnings": len(self.warnings),
+        }
+
+
+def audit_registry(kernels: Optional[List[str]] = None, *,
+                   cache_dir: Optional[str] = None, hw=TPU_V5E,
+                   skip_cache: bool = False) -> AuditReport:
+    """Audit every registered kernel family at its canonical shapes, every
+    version, plus the tune cache — the engine behind `python -m
+    repro.analyze` and the CI `static-analysis` gate.
+
+    Example::
+
+        from repro.analyze import audit_registry
+        report = audit_registry(["gpp"], skip_cache=True)
+        assert not report.errors       # registry is lint-clean
+    """
+    from repro.kernels import api
+    names = kernels if kernels is not None else api.list_kernels()
+    censuses: List[KernelCensus] = []
+    findings: List[Finding] = []
+    for name in names:
+        k = api.get_kernel(name)
+        for key in k.canonical_keys():
+            for version in k.versions:
+                census, fs = audit_kernel(k, version, key, hw=hw)
+                censuses.append(census)
+                findings.extend(fs)
+    if not skip_cache:
+        findings.extend(audit_tune_cache(cache_dir))
+    return AuditReport(censuses=censuses, findings=findings)

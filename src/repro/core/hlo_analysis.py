@@ -1,512 +1,14 @@
-"""HLO-text analysis: the 'Nsight Compute' of this framework.
-
-The paper drives every optimization step from profiler artifacts (Nsight
-Compute sampling data + roofline dots). On a CPU-only container targeting TPU,
-the equivalent artifact is the compiled HLO module: this file extracts
-
-  * collective traffic by op kind (all-gather / all-reduce / reduce-scatter /
-    all-to-all / collective-permute), summing operand bytes -- the numerator of
-    the roofline collective term;
-  * matmul (MXU-eligible) FLOPs from `dot` ops, used for the customized
-    ceiling (the TPU analogue of the paper's 58%-FMA ceiling);
-  * remat / duplication census (duplicate op fingerprints => recompute waste);
-  * layout-change census (transpose/copy bytes, the paper's v7 lens);
-  * select census (branching-as-masks, the paper's v2 lens).
-
-Post-SPMD HLO prints operands as bare `%name` references, so shape lookup is
-two-pass: pass 1 records every instruction's result shape(s); pass 2 resolves
-operand names against that table. Works on plain compiled.as_text() output.
+"""Back-compat shim: the HLO-text parsing/census layer moved to
+`repro.analyze.hlo` (the parsing layer of the `repro.analyze` static
+auditor), so the roofline bench paths and the registry-wide kernel auditor
+share one census implementation. Every public name — and the private
+helpers tests exercise — re-exports from there; new code should import
+`repro.analyze.hlo` directly.
 """
 
-from __future__ import annotations
-
-import dataclasses
-import re
-from collections import Counter
-from typing import Dict, List, Tuple
-
-from repro.core.hw import DTYPE_BYTES
-
-COLLECTIVE_OPS = (
-    "all-gather",
-    "all-reduce",
-    "reduce-scatter",
-    "all-to-all",
-    "collective-permute",
+from repro.analyze.hlo import *                          # noqa: F401,F403
+from repro.analyze.hlo import (                          # noqa: F401
+    _EW_OPS, _FREE_OPS, _Instr, _instr_bytes, _instr_flops, _operand_names,
+    _parse_def, _parse_instructions, _parse_shapes, _shape_list_bytes,
+    _split_computations,
 )
-
-# `f32[1024,512]{1,0}` / `bf16[8]` / scalar `f32[]`
-_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
-# definition: `%name = <shapes> opname(` ; shapes may be a tuple
-_DEF_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%([A-Za-z0-9_.\-]+)\s*=\s*(\(?[^)=]*?\)?)\s*([a-z][a-z0-9\-]*)\("
-)
-_OPERAND_RE = re.compile(r"%([A-Za-z0-9_.\-]+)")
-_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
-
-
-def _parse_shapes(text: str) -> List[Tuple[str, List[int]]]:
-    out = []
-    for dt, dims in _SHAPE_RE.findall(text):
-        if dt in DTYPE_BYTES:
-            out.append((dt, [int(d) for d in dims.split(",") if d]))
-    return out
-
-
-def _shape_list_bytes(shapes: List[Tuple[str, List[int]]]) -> int:
-    total = 0
-    for dt, dims in shapes:
-        n = 1
-        for d in dims:
-            n *= d
-        total += n * DTYPE_BYTES[dt]
-    return total
-
-
-@dataclasses.dataclass
-class _Instr:
-    name: str
-    op: str
-    shapes: List[Tuple[str, List[int]]]  # result shape(s)
-    operands: List[str]
-    line: str
-
-
-_DEF_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
-_OP_NAME_RE = re.compile(r"\s*([a-z][a-z0-9\-]*)\(")
-
-
-def _parse_def(line: str):
-    """Robustly parse `%name = <shape|tuple> opname(operands...), attrs`.
-    Handles tuple result shapes containing `/*index=N*/` comments (which
-    break naive regexes on `=`)."""
-    m = _DEF_NAME_RE.match(line)
-    if m is None:
-        return None
-    name = m.group(1)
-    rest = line[m.end():]
-    if rest.startswith("("):
-        depth = 0
-        end = 0
-        for i, ch in enumerate(rest):
-            if ch == "(":
-                depth += 1
-            elif ch == ")":
-                depth -= 1
-                if depth == 0:
-                    end = i
-                    break
-        shape_text = rest[: end + 1]
-        rest = rest[end + 1:]
-    else:
-        sp = re.match(r"\S+", rest)
-        if sp is None:
-            return None
-        shape_text = sp.group(0)
-        rest = rest[sp.end():]
-    om = _OP_NAME_RE.match(rest)
-    if om is None:
-        return None
-    op = om.group(1)
-    after = rest[om.end():]
-    depth = 1
-    end = len(after)
-    for i, ch in enumerate(after):
-        if ch == "(":
-            depth += 1
-        elif ch == ")":
-            depth -= 1
-            if depth == 0:
-                end = i
-                break
-    operands = _OPERAND_RE.findall(after[:end])
-    return _Instr(name, op, _parse_shapes(shape_text), operands, line.strip())
-
-
-def _parse_instructions(hlo_text: str) -> List[_Instr]:
-    instrs: List[_Instr] = []
-    for line in hlo_text.splitlines():
-        ins = _parse_def(line)
-        if ins is not None:
-            instrs.append(ins)
-    return instrs
-
-
-@dataclasses.dataclass
-class CollectiveStats:
-    bytes_by_kind: Dict[str, int]
-    count_by_kind: Dict[str, int]
-    ops: List[tuple]  # (kind, bytes, line[:160])
-
-    @property
-    def total_bytes(self) -> int:
-        return sum(self.bytes_by_kind.values())
-
-    @property
-    def total_count(self) -> int:
-        return sum(self.count_by_kind.values())
-
-
-def collect_collectives(hlo_text: str) -> CollectiveStats:
-    """Sum operand sizes of every collective op in the (per-device) module.
-
-    Async pairs (`*-start`/`*-done`) are counted once, on the start half.
-    Operand shapes are resolved via the definition table; if an operand is a
-    parameter (defined without an op match) we fall back to the collective's
-    own result shape, adjusted per-kind (all-gather results are group_size x
-    operand size; reduce-scatter results are 1/group_size).
-    """
-    instrs = _parse_instructions(hlo_text)
-    table: Dict[str, List[Tuple[str, List[int]]]] = {}
-    for ins in instrs:
-        table[ins.name] = ins.shapes
-
-    bytes_by_kind: Counter = Counter()
-    count_by_kind: Counter = Counter()
-    ops: List[tuple] = []
-
-    for ins in instrs:
-        base = None
-        for kind in COLLECTIVE_OPS:
-            if ins.op == kind or ins.op == kind + "-start":
-                base = kind
-                break
-        if base is None:
-            continue
-        nbytes = 0
-        resolved = [table[o] for o in ins.operands if o in table and table[o]]
-        if resolved:
-            for shapes in resolved:
-                nbytes += _shape_list_bytes(shapes)
-        else:
-            nbytes = _shape_list_bytes(ins.shapes)
-        bytes_by_kind[base] += nbytes
-        count_by_kind[base] += 1
-        ops.append((base, nbytes, ins.line[:160]))
-
-    return CollectiveStats(dict(bytes_by_kind), dict(count_by_kind), ops)
-
-
-def collect_dot_flops(hlo_text: str) -> float:
-    """Estimate MXU-eligible FLOPs: 2 * prod(result dims) * contraction size.
-
-    Resolves the lhs operand's shape through the definition table and reads
-    `lhs_contracting_dims` off the dot line. Convolutions are counted via
-    their result size * 2 * kernel-volume when present (rare in this repo).
-    """
-    instrs = _parse_instructions(hlo_text)
-    table: Dict[str, List[Tuple[str, List[int]]]] = {i.name: i.shapes for i in instrs}
-    total = 0.0
-    for ins in instrs:
-        if ins.op != "dot":
-            continue
-        if not ins.shapes:
-            continue
-        result_elems = 1
-        for d in ins.shapes[0][1]:
-            result_elems *= d
-        cm = _DOT_CONTRACT_RE.search(ins.line)
-        if cm is None or not ins.operands:
-            continue
-        lhs_shapes = table.get(ins.operands[0]) or []
-        if not lhs_shapes:
-            continue
-        lhs_dims = lhs_shapes[0][1]
-        contract = 1
-        for i in [int(x) for x in cm.group(1).split(",") if x]:
-            if i < len(lhs_dims):
-                contract *= lhs_dims[i]
-        total += 2.0 * result_elems * contract
-    return total
-
-
-@dataclasses.dataclass
-class ModuleCensus:
-    """Structural health metrics for a compiled module (the v2/v6/v7 lenses)."""
-    op_counts: Dict[str, int]
-    duplicate_dot_ratio: float  # >1.0 means remat-style recompute of matmuls
-    transpose_bytes: int        # layout churn (paper v7 lens)
-    select_count: int           # branching-as-selects (paper v2 lens)
-    fusion_count: int
-
-    def summary(self) -> str:
-        return (
-            f"fusions={self.fusion_count} selects={self.select_count} "
-            f"transpose_bytes={self.transpose_bytes:,} "
-            f"dup_dot_ratio={self.duplicate_dot_ratio:.3f}"
-        )
-
-
-def census(hlo_text: str) -> ModuleCensus:
-    instrs = _parse_instructions(hlo_text)
-    op_counts: Counter = Counter()
-    transpose_bytes = 0
-    select_count = 0
-    fusion_count = 0
-    dot_fingerprints: Counter = Counter()
-
-    for ins in instrs:
-        op_counts[ins.op] += 1
-        if ins.op in ("transpose", "copy"):
-            transpose_bytes += _shape_list_bytes(ins.shapes)
-        elif ins.op == "select":
-            select_count += 1
-        elif ins.op == "fusion":
-            fusion_count += 1
-        elif ins.op == "dot":
-            key = (tuple((dt, tuple(d)) for dt, d in ins.shapes),
-                   tuple(ins.operands))
-            # fingerprint by shape only (operand names differ across remat copies)
-            dot_fingerprints[key[0]] += 1
-
-    total_dots = sum(dot_fingerprints.values())
-    uniq_dots = len(dot_fingerprints)
-    ratio = (total_dots / uniq_dots) if uniq_dots else 1.0
-
-    return ModuleCensus(
-        op_counts=dict(op_counts),
-        duplicate_dot_ratio=ratio,
-        transpose_bytes=transpose_bytes,
-        select_count=select_count,
-        fusion_count=fusion_count,
-    )
-
-
-# ===========================================================================
-# loop-aware whole-module cost (fixes XLA cost_analysis undercounting:
-# while-loop bodies are counted ONCE by cost_analysis, but a scanned
-# 64-layer model executes the body 64 times — this walker scales by trip
-# count, which is what makes the §Roofline table correct for scanned models)
-# ===========================================================================
-
-_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
-_WHILE_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
-_CONST_INT_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
-
-# 1 flop per output element
-_EW_OPS = {
-    "add", "subtract", "multiply", "divide", "negate", "abs", "maximum",
-    "minimum", "compare", "select", "and", "or", "not", "xor", "power",
-    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
-    "sqrt", "cbrt", "tanh", "logistic", "sign", "floor", "ceil",
-    "round-nearest-afz", "round-nearest-even", "atan2", "clamp",
-    "shift-left", "shift-right-logical", "shift-right-arithmetic",
-    "remainder", "cosine", "sine", "is-finite", "expm1", "erf",
-}
-_FREE_OPS = {
-    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
-    "bitcast-convert", "after-all", "custom-call", "reshape", "iota",
-    "partition-id", "replica-id", "rng-bit-generator",
-}
-
-
-@dataclasses.dataclass
-class ModuleCost:
-    flops: float                    # loop-scaled total flops (all ops)
-    dot_flops: float                # loop-scaled matmul flops (MXU share)
-    hbm_bytes: float                # loop-scaled operand+result bytes at
-                                    # fusion granularity (HBM traffic model)
-    collective_bytes: float
-    collective_bytes_by_kind: Dict[str, float]
-    collective_count_by_kind: Dict[str, float]
-    while_trips: List[int]
-
-
-def _split_computations(hlo_text: str) -> Dict[str, List[_Instr]]:
-    comps: Dict[str, List[_Instr]] = {}
-    current: List[str] = []
-    name = None
-    entry = None
-    for line in hlo_text.splitlines():
-        m = _COMP_HEADER_RE.match(line.strip())
-        if m and ("->" in line):
-            name = m.group(2)
-            if m.group(1):
-                entry = name
-            comps[name] = []
-            continue
-        if name is None:
-            continue
-        if line.strip() == "}":
-            name = None
-            continue
-        comps.setdefault(name, [])
-        ins = _parse_def(line)
-        if ins is not None:
-            comps[name].append(ins)
-    comps["__entry__"] = comps.get(entry, [])
-    comps["__entry_name__"] = entry
-    return comps
-
-
-def _instr_flops(ins: _Instr, table) -> Tuple[float, float]:
-    """(flops, dot_flops) for one instruction."""
-    if ins.op == "dot":
-        if not ins.shapes or not ins.operands:
-            return 0.0, 0.0
-        result_elems = 1
-        for d in ins.shapes[0][1]:
-            result_elems *= d
-        cm = _DOT_CONTRACT_RE.search(ins.line)
-        lhs_shapes = table.get(ins.operands[0]) or []
-        if cm is None or not lhs_shapes:
-            return 0.0, 0.0
-        lhs_dims = lhs_shapes[0][1]
-        contract = 1
-        for i in [int(x) for x in cm.group(1).split(",") if x]:
-            if i < len(lhs_dims):
-                contract *= lhs_dims[i]
-        f = 2.0 * result_elems * contract
-        return f, f
-    if ins.op in _EW_OPS:
-        n = 1
-        for d in (ins.shapes[0][1] if ins.shapes else []):
-            n *= d
-        return float(n), 0.0
-    if ins.op in ("reduce", "reduce-window", "cumsum"):
-        # count input elements of the first operand
-        sh = table.get(ins.operands[0]) if ins.operands else None
-        n = 1
-        for d in (sh[0][1] if sh else []):
-            n *= d
-        return float(n), 0.0
-    return 0.0, 0.0
-
-
-def _instr_bytes(ins: _Instr, table) -> float:
-    """Bytes touched by one instruction (HBM traffic model).
-
-    Slice-family ops only touch the slice, not the whole operand:
-      dynamic-slice/slice/gather        -> result bytes x2 (read + write)
-      dynamic-update-slice/scatter      -> update operand x2 (in-place on TPU)
-    Everything else: operands + results.
-    """
-    if ins.op in _FREE_OPS or ins.op.endswith("-done"):
-        return 0.0
-    if ins.op in ("dynamic-slice", "slice", "gather", "broadcast"):
-        return 2.0 * _shape_list_bytes(ins.shapes)
-    if ins.op in ("dynamic-update-slice", "scatter"):
-        # update operand is the second one
-        upd = table.get(ins.operands[1]) if len(ins.operands) > 1 else None
-        return 2.0 * (_shape_list_bytes(upd) if upd
-                      else _shape_list_bytes(ins.shapes))
-    total = _shape_list_bytes(ins.shapes)
-    for o in ins.operands:
-        sh = table.get(o)
-        if sh:
-            total += _shape_list_bytes(sh)
-    return float(total)
-
-
-def module_cost(hlo_text: str, *, max_depth: int = 32) -> ModuleCost:
-    """Loop-aware module cost via scale propagation over the call graph.
-
-    scale(entry)=1; every computation referenced from a scaled computation
-    inherits scale x multiplier, where multiplier = trip count for while
-    bodies and 1 for fusions/calls/conditionals. Costs are then summed as
-    scale(comp) x own_cost(comp). Fusion bodies contribute flops only (their
-    internals never touch HBM).
-    """
-    comps = _split_computations(hlo_text)
-    comps.pop("__entry__", None)
-    entry = comps.pop("__entry_name__", None)
-
-    table: Dict[str, List[Tuple[str, List[int]]]] = {}
-    for instrs in comps.values():
-        for ins in instrs:
-            table[ins.name] = ins.shapes
-
-    ref_re = re.compile(r"(calls|to_apply|condition|body)=%?([\w.\-]+)")
-    branches_re = re.compile(r"branch_computations=\{([^}]*)\}")
-
-    def trip_count(cond_comp: str) -> int:
-        best = 1
-        for ins in comps.get(cond_comp, []):
-            for mm in _CONST_INT_RE.finditer(ins.line):
-                best = max(best, int(mm.group(1)))
-        return best
-
-    # build edges: comp -> [(child, multiplier, via_fusion)]
-    edges: Dict[str, list] = {c: [] for c in comps}
-    fusion_bodies = set()
-    referenced = set()
-    while_trips: List[int] = []
-    for cname, instrs in comps.items():
-        for ins in instrs:
-            body = cond = None
-            for key, target in ref_re.findall(ins.line):
-                referenced.add(target)
-                if key == "body":
-                    body = target
-                elif key == "condition":
-                    cond = target
-                elif key == "calls":
-                    if ins.op == "fusion":
-                        fusion_bodies.add(target)
-                    edges[cname].append((target, 1.0, ins.op == "fusion"))
-                else:  # to_apply (call, reduce, sort, ...)
-                    edges[cname].append((target, 1.0, ins.op not in ("call", "conditional")))
-            bm = branches_re.search(ins.line)
-            if bm:
-                for t in _OPERAND_RE.findall(bm.group(1)):
-                    referenced.add(t)
-                    edges[cname].append((t, 1.0, False))
-            if body is not None:
-                trips = trip_count(cond) if cond else 1
-                while_trips.append(trips)
-                edges[cname].append((body, float(trips), False))
-                if cond:
-                    edges[cname].append((cond, float(trips), True))
-
-    roots = [c for c in comps if c not in referenced]
-    if entry and entry in comps:
-        roots = [entry]
-
-    # propagate scales (DAG; guard depth for safety)
-    scale: Dict[str, float] = {c: 0.0 for c in comps}
-    fus: Dict[str, bool] = {c: False for c in comps}
-
-    def push(c, s, f, depth):
-        if depth > max_depth or c not in comps:
-            return
-        scale[c] += s
-        fus[c] = fus[c] or f
-        for child, mult, via_fusion in edges.get(c, []):
-            push(child, s * mult, f or via_fusion, depth + 1)
-
-    for r in roots:
-        push(r, 1.0, False, 0)
-
-    cost = ModuleCost(0.0, 0.0, 0.0, 0.0, {}, {}, while_trips)
-    for cname, instrs in comps.items():
-        s = scale[cname]
-        if s <= 0:
-            continue
-        in_fusion = fus[cname]
-        for ins in instrs:
-            f, df = _instr_flops(ins, table)
-            cost.flops += f * s
-            cost.dot_flops += df * s
-            if not in_fusion and ins.op not in ("while", "call", "conditional"):
-                cost.hbm_bytes += _instr_bytes(ins, table) * s
-            base = None
-            for kind in COLLECTIVE_OPS:
-                if ins.op == kind or ins.op == kind + "-start":
-                    base = kind
-                    break
-            if base is not None:
-                nb = 0
-                resolved = [table[o] for o in ins.operands
-                            if o in table and table[o]]
-                if resolved:
-                    for shapes in resolved:
-                        nb += _shape_list_bytes(shapes)
-                else:
-                    nb = _shape_list_bytes(ins.shapes)
-                cost.collective_bytes += nb * s
-                cost.collective_bytes_by_kind[base] = \
-                    cost.collective_bytes_by_kind.get(base, 0.0) + nb * s
-                cost.collective_count_by_kind[base] = \
-                    cost.collective_count_by_kind.get(base, 0.0) + s
-    return cost

@@ -29,7 +29,7 @@ import dataclasses
 import json
 from typing import Any, Dict, Optional
 
-from repro.core import hlo_analysis
+from repro.analyze import hlo as hlo_analysis
 from repro.core.hw import TPU_V5E, HardwareSpec
 
 

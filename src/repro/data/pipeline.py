@@ -17,7 +17,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 
 
 @dataclasses.dataclass

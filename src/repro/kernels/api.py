@@ -117,6 +117,40 @@ class Kernel:
     def config_from_json(self, d: Dict) -> Any:
         raise NotImplementedError
 
+    # -- static-analysis hooks (repro.analyze, docs/analysis.md) -----------
+    def canonical_keys(self) -> List["ProblemKey"]:
+        """Representative shapes the `repro.analyze` auditor censuses this
+        family at (small enough to trace on CPU; one golden shape per
+        family is pinned in tests). Empty = the auditor skips the family."""
+        return []
+
+    def key_from_dims(self, dims: str) -> "ProblemKey":
+        """Inverse of `ProblemKey.key_dims()` — rebuild the key from its
+        cache-dims string so the tune-cache validator can re-derive the
+        current config space for a cached entry. Kernels that don't
+        implement it only get existence (not config-space) validation."""
+        raise NotImplementedError(f"{self.name} cannot parse key dims")
+
+    def config_vmem_bytes(self, config: Any, key: "ProblemKey"
+                          ) -> Optional[int]:
+        """Analytic VMEM working set of `config` at `key` (double-buffered
+        inputs + live intermediates), checked against the hw budget by the
+        auditor's VMEM001 rule. None = no VMEM model for this family."""
+        return None
+
+    def config_divides(self, config: Any, key: "ProblemKey") -> List[str]:
+        """Divisibility violations of `config` at `key` — one human-readable
+        string per axis the blocks cannot tile (BLK001 is raised for each).
+        Called on the *clamped* config: non-empty means the clamp rules
+        cannot repair this (config, problem) pair."""
+        return []
+
+    def allowed_float_dtypes(self, version: str) -> frozenset:
+        """Float/complex dtype names this version's compute path may touch;
+        any other float dtype in the traced jaxpr is a DTYPE001 leak (f32
+        ops inside a declared-f64 path and vice versa). Empty = unchecked."""
+        return frozenset()
+
     # -- execution ---------------------------------------------------------
     def run(self, *args, version: str, config: Any,
             interpret: Optional[bool], **kwargs) -> Any:

@@ -26,7 +26,6 @@ oracle) in interpret mode by tests/test_flash_kernel.py.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -162,6 +162,34 @@ class FlashKernel(api.Kernel):
     def config_from_json(self, d: Dict) -> FlashBlockConfig:
         return FlashBlockConfig(**d)
 
+    # -- static-analysis hooks (repro.analyze) -----------------------------
+    def canonical_keys(self) -> List[FlashKey]:
+        return [FlashKey(b=2, h=2, kvh=2, sq=128, skv=128, hd=32,
+                         causal=True)]
+
+    def key_from_dims(self, dims: str) -> FlashKey:
+        causal = dims.endswith("c")
+        b, h, kvh, sq, skv, hd = (int(d) for d in dims[:-1].split("x"))
+        return FlashKey(b=b, h=h, kvh=kvh, sq=sq, skv=skv, hd=hd,
+                        causal=causal)
+
+    def config_vmem_bytes(self, config: FlashBlockConfig, key: FlashKey
+                          ) -> int:
+        return config.vmem_bytes(key.hd)
+
+    def config_divides(self, config: FlashBlockConfig, key: FlashKey
+                       ) -> List[str]:
+        out = []
+        for axis, n, blk in (("sq", key.sq, config.blk_q),
+                             ("skv", key.skv, config.blk_kv)):
+            if blk <= 0 or n % blk:
+                out.append(f"{axis}={n} not tiled by block {blk}")
+        return out
+
+    def allowed_float_dtypes(self, version: str) -> frozenset:
+        # bf16 operands, f32 stats/accumulator/output
+        return frozenset({"bfloat16", "float32"})
+
     def run(self, q, k, v, *, version: str,
             config: Optional[FlashBlockConfig], interpret: Optional[bool],
             causal: bool = True):

@@ -89,6 +89,37 @@ class GppKernel(api.Kernel):
     def config_from_json(self, d: Dict) -> pallas_gpp.BlockConfig:
         return pallas_gpp.BlockConfig(**d)
 
+    # -- static-analysis hooks (repro.analyze) -----------------------------
+    def canonical_keys(self) -> List[problem.GppSize]:
+        return [problem.TINY, problem.BENCH]
+
+    def key_from_dims(self, dims: str) -> problem.GppSize:
+        ncouls, ngpown, nbands, nw = (int(d) for d in dims.split("x"))
+        for s in problem.SIZES.values():
+            if (s.ncouls, s.ngpown, s.nbands, s.nw) == (ncouls, ngpown,
+                                                        nbands, nw):
+                return s
+        return problem.GppSize("custom", nbands=nbands, ngpown=ngpown,
+                               ncouls=ncouls, nw=nw)
+
+    def config_vmem_bytes(self, config: pallas_gpp.BlockConfig,
+                          key: problem.GppSize) -> int:
+        return config.vmem_bytes(key.nw)
+
+    def config_divides(self, config: pallas_gpp.BlockConfig,
+                       key: problem.GppSize) -> List[str]:
+        out = []
+        for axis, n, blk in (("ncouls", key.ncouls, config.blk_ig),
+                             ("ngpown", key.ngpown, config.blk_igp),
+                             ("nbands", key.nbands, config.blk_band)):
+            if blk <= 0 or n % blk:
+                out.append(f"{axis}={n} not tiled by block {blk}")
+        return out
+
+    def allowed_float_dtypes(self, version: str) -> frozenset:
+        # planar f32 arithmetic; outputs assemble to complex64
+        return frozenset({"float32", "complex64"})
+
     def run(self, inputs: Dict, *, version: str,
             config: Optional[pallas_gpp.BlockConfig],
             interpret: Optional[bool]) -> Tuple[Any, Any]:

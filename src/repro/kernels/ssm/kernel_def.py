@@ -143,6 +143,26 @@ class SsmKernel(api.Kernel):
     def config_from_json(self, d: Dict) -> SsmScanConfig:
         return SsmScanConfig(**d)
 
+    # -- static-analysis hooks (repro.analyze) -----------------------------
+    def canonical_keys(self) -> List[SsmKey]:
+        return [SsmKey(b=2, t=32, c=64, n=8)]
+
+    def key_from_dims(self, dims: str) -> SsmKey:
+        b, t, c, n = (int(d) for d in dims.split("x"))
+        return SsmKey(b=b, t=t, c=c, n=n)
+
+    def config_vmem_bytes(self, config: SsmScanConfig, key: SsmKey) -> int:
+        return config.vmem_bytes(key)
+
+    def config_divides(self, config: SsmScanConfig, key: SsmKey
+                       ) -> List[str]:
+        if config.blk_c <= 0 or key.c % config.blk_c:
+            return [f"c={key.c} not tiled by block {config.blk_c}"]
+        return []
+
+    def allowed_float_dtypes(self, version: str) -> frozenset:
+        return frozenset({"float32"})
+
     def run(self, x, dt, bmat, cmat, a_log, d, h0, *, version: str,
             config: Optional[SsmScanConfig], interpret: Optional[bool]):
         if version == "ref":

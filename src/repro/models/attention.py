@@ -16,7 +16,6 @@ instead of gathering the whole cache.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -16,8 +16,6 @@ The depthwise causal conv1d (kernel 4) that precedes the SSM keeps a
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

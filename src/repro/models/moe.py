@@ -108,7 +108,6 @@ def moe_ffn_ep(x, params, *, n_experts: int, k: int, mesh, dp_axes,
     instruction opcode copy") under scan+remat, and manual mode lets the
     cross-tp psum run in bf16 (half wire) explicitly.
     Returns (out (T, D), aux)."""
-    import numpy as np
     from jax.sharding import PartitionSpec as P
 
     n_shards = 1

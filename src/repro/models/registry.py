@@ -18,10 +18,9 @@ from repro.configs.base import ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import mamba as mamba_lib
 from repro.models import moe as moe_lib
-from repro.models import rwkv6 as rwkv_lib
 from repro.models import transformer as T
 from repro.models.layers import (
-    PARAM_DTYPE, DistCtx, ParamBuilder, embed, gelu_ffn, layer_norm,
+    PARAM_DTYPE, DistCtx, embed, gelu_ffn, layer_norm,
     lm_logits, matmul, rms_norm, softmax_xent, swiglu,
 )
 

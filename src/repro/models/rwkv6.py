@@ -19,12 +19,8 @@ Recurrence (per head, k-dim i, v-dim j):
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-
-from repro.models.layers import PARAM_DTYPE
 
 
 def wkv6_scan(r, k, v, w, u, state):

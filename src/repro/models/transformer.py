@@ -21,9 +21,7 @@ Three entry points per model (see ModelConfig shapes):
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,12 +29,10 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn_lib
 from repro.models import mamba as mamba_lib
-from repro.models import moe as moe_lib
 from repro.models import rwkv6 as rwkv_lib
 from repro.models.layers import (
-    PARAM_DTYPE, DistCtx, ParamBuilder, apply_rope, embed, gelu_ffn,
-    layer_norm, lm_logits, matmul, matmul_rp, rms_norm, sinusoid_pos,
-    softmax_xent, swiglu,
+    PARAM_DTYPE, DistCtx, ParamBuilder, apply_rope, embed, matmul,
+    matmul_rp, swiglu,
 )
 
 PyTree = Any

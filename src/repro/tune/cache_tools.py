@@ -1,0 +1,142 @@
+"""Tune-cache hygiene: validate / prune `kernel_tune.json` entries against
+the CURRENT registry (docs/analysis.md §CACHE001).
+
+The cache outlives code: a kernel family can drop a version, a config
+space can shrink (VMEM budget change, new divisibility rule), a config
+dataclass can gain a field. A stale entry then silently re-enters dispatch
+with a config the current code would never pick — the static auditor's
+CACHE001 rule exists to catch exactly that, and this module is its
+read-only backend plus the `python -m repro.tune prune` repair tool.
+
+An entry `kernel|dims|backend|version -> {config: {...}}` is stale when:
+
+  unknown-kernel    the kernel family is no longer registered
+  unknown-version   the version left the family's `versions` tuple
+  malformed-key     the key does not split into 4 `|` fields
+  bad-config        `config_from_json` cannot rebuild the config
+                    (field drift in the config dataclass)
+  outside-space     the config is not in the kernel's CURRENT
+                    `config_space(key, version)` (compared ignoring the
+                    cosmetic `name` stamp; needs `key_from_dims` — kernels
+                    without it get existence-only validation)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import List, Optional, Tuple
+
+from repro.tune import tuner
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheIssue:
+    """One stale cache entry: the key, a machine-readable reason (the
+    vocabulary in the module docstring), and a human detail line."""
+    key: str
+    reason: str
+    detail: str
+    kernel: str = ""
+    version: str = ""
+    dims: str = ""
+
+
+def _configs_equal(a, b) -> bool:
+    """Config identity ignoring the cosmetic `name` stamp (cached winners
+    are renamed to the version; space candidates are named 'tune')."""
+    if dataclasses.is_dataclass(a) and dataclasses.is_dataclass(b):
+        names = {f.name for f in dataclasses.fields(a)}
+        if "name" in names:
+            a = dataclasses.replace(a, name="")
+            b = dataclasses.replace(b, name="")
+    return a == b
+
+
+def validate_cache(cache_dir: Optional[str] = None) -> List[CacheIssue]:
+    """Read-only check of every cache entry against the current registry.
+    Returns one `CacheIssue` per stale entry (empty list = clean cache; a
+    missing cache file is clean). Never mutates the cache — this is what
+    the auditor's CACHE001 rule calls.
+
+    Example::
+
+        from repro.tune.cache_tools import validate_cache
+        issues = validate_cache()          # default runs/tune cache
+        [(i.key, i.reason) for i in issues]
+    """
+    from repro.kernels import api
+    issues: List[CacheIssue] = []
+    for ckey, entry in sorted(tuner._load_cache(cache_dir).items()):
+        parts = ckey.split("|")
+        if len(parts) != 4:
+            issues.append(CacheIssue(ckey, "malformed-key",
+                                     f"expected 4 '|' fields, got "
+                                     f"{len(parts)}"))
+            continue
+        kname, dims, _backend, version = parts
+        try:
+            k = api.get_kernel(kname)
+        except KeyError:
+            issues.append(CacheIssue(ckey, "unknown-kernel",
+                                     f"kernel {kname!r} is not registered",
+                                     kernel=kname, version=version,
+                                     dims=dims))
+            continue
+        if version not in k.versions:
+            issues.append(CacheIssue(ckey, "unknown-version",
+                                     f"{kname} no longer has version "
+                                     f"{version!r}", kernel=kname,
+                                     version=version, dims=dims))
+            continue
+        try:
+            cfg = k.config_from_json(dict(entry.get("config") or {}))
+        except Exception as e:
+            issues.append(CacheIssue(ckey, "bad-config",
+                                     f"config_from_json failed: {e}",
+                                     kernel=kname, version=version,
+                                     dims=dims))
+            continue
+        try:
+            key = k.key_from_dims(dims)
+        except NotImplementedError:
+            continue          # existence-only validation for this family
+        except Exception as e:
+            issues.append(CacheIssue(ckey, "malformed-key",
+                                     f"key_from_dims({dims!r}) failed: {e}",
+                                     kernel=kname, version=version,
+                                     dims=dims))
+            continue
+        space = k.config_space(key, version)
+        if space and not any(_configs_equal(cfg, c) for c in space):
+            issues.append(CacheIssue(
+                ckey, "outside-space",
+                f"cached config {entry.get('config')} not in the current "
+                f"{len(space)}-candidate space", kernel=kname,
+                version=version, dims=dims))
+    return issues
+
+
+def prune_cache(cache_dir: Optional[str] = None, *, dry_run: bool = False
+                ) -> Tuple[int, List[CacheIssue]]:
+    """Drop every stale entry `validate_cache` flags and rewrite the cache
+    atomically. Returns `(kept, dropped_issues)`; warns with the full list
+    of pruned keys so a CI log shows what disappeared. `dry_run=True`
+    reports without rewriting.
+
+    Example::
+
+        from repro.tune.cache_tools import prune_cache
+        kept, dropped = prune_cache(dry_run=True)
+    """
+    issues = validate_cache(cache_dir)
+    entries = tuner._load_cache(cache_dir)
+    stale = {i.key for i in issues}
+    kept = {k: v for k, v in entries.items() if k not in stale}
+    if stale and not dry_run:
+        tuner._store_cache(cache_dir, kept)
+        tuner.clear_memo()      # drop in-process copies of pruned entries
+    if stale:
+        warnings.warn("pruned stale tune-cache entries: "
+                      + ", ".join(sorted(stale)), stacklevel=2)
+    return len(kept), issues

@@ -1,0 +1,69 @@
+"""Deliberately-broken fixture kernel for the static-auditor tests
+(docs/analysis.md §Testing the gate).
+
+Registers `badfix`: a kernel whose only config declares a VMEM working set
+double the hardware budget — the auditor must flag it VMEM001 (error) and
+`python -m repro.analyze --strict --extra-module fixture_badkernel
+--kernel badfix` must exit nonzero. Import-time registration is the point:
+the CLI's `--extra-module` hook exists exactly so out-of-tree kernels join
+the audit this way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hw import TPU_V5E
+from repro.kernels import api
+
+
+@dataclasses.dataclass(frozen=True)
+class FixKey:
+    n: int = 256
+    name: str = "fix"
+
+    def key_dims(self) -> str:
+        return str(self.n)
+
+
+@dataclasses.dataclass(frozen=True)
+class FixConfig:
+    name: str = "bad"
+    # f32 elements; 2x the whole VMEM on purpose
+    blk: int = 2 * TPU_V5E.vmem_bytes // 4
+
+
+class BadKernel(api.Kernel):
+    name = "badfix"
+    versions = ("pallas",)
+    default_version = "pallas"
+
+    def static_config(self, key: FixKey, version: str) -> FixConfig:
+        return FixConfig()
+
+    def make_example(self, key: FixKey, seed: int = 0) -> Tuple[tuple, dict]:
+        return (jnp.asarray(np.linspace(0, 1, key.n, dtype=np.float32)),), {}
+
+    def config_from_json(self, d: Dict) -> FixConfig:
+        return FixConfig(**d)
+
+    def canonical_keys(self) -> List[FixKey]:
+        return [FixKey()]
+
+    def key_from_dims(self, dims: str) -> FixKey:
+        return FixKey(n=int(dims))
+
+    def config_vmem_bytes(self, config: FixConfig, key: FixKey
+                          ) -> Optional[int]:
+        return 4 * config.blk
+
+    def run(self, x, *, version: str, config: Optional[FixConfig],
+            interpret: Optional[bool]):
+        return jnp.tanh(x) * x + x
+
+
+KERNEL = api.register(BadKernel())

@@ -1,0 +1,119 @@
+"""Regression fixtures for the `repro.analyze.hlo` parsing layer.
+
+Canned `compiled.as_text()` excerpts covering the spellings XLA actually
+emits that naive regexes drop:
+
+  * classic `%name = shape op(%a, %b)` lines;
+  * post-SPMD bare spellings (`name = f32[8]{0} add(a, b)`) — no `%`
+    anywhere, operands recovered from top-level commas;
+  * tuple result shapes with `/*index=N*/` comments (which contain `=`
+    and break split-on-`=` parsers);
+  * bounded-dynamic dims (`f32[<=8,4]`) counted at the bound.
+
+Plus the back-compat contract: `repro.core.hlo_analysis` re-exports the
+whole surface (the serve/dist bench paths import it from there).
+"""
+
+from repro.analyze import hlo
+
+# classic spelling: %-prefixed names, tuple-shaped result with /*index=N*/
+CLASSIC = """
+HloModule m
+
+ENTRY %main (p0: f32[128,256], p1: f32[256,64]) -> (f32[128,64], f32[128]) {
+  %p0 = f32[128,256]{1,0} parameter(0)
+  %p1 = f32[256,64]{1,0} parameter(1)
+  %dot.1 = f32[128,64]{1,0} dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ag = f32[128,64]{1,0} all-gather(%dot.1), replica_groups={{0,1}}, dimensions={0}
+  %red = f32[128]{0} reduce(%dot.1, %c0), dimensions={1}, to_apply=%sum
+  ROOT %tup = (f32[128,64]{1,0} /*index=0*/, f32[128]{0} /*index=1*/) tuple(%ag, %red)
+}
+"""
+
+# post-SPMD spelling: bare names everywhere, literal operands mixed in
+BARE = """
+HloModule spmd_m
+
+ENTRY main (p0: f32[128,256], p1: f32[256,64]) -> f32[128,64] {
+  p0 = f32[128,256]{1,0} parameter(0)
+  p1 = f32[256,64]{1,0} parameter(1)
+  dot.1 = f32[128,64]{1,0} dot(p0, p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  c1 = f32[] constant(2.5)
+  b1 = f32[128,64]{1,0} broadcast(c1), dimensions={}
+  scaled = f32[128,64]{1,0} multiply(dot.1, b1)
+  ars = f32[128,64]{1,0} all-reduce-start(scaled), to_apply=add_comp
+  ROOT ard = f32[128,64]{1,0} all-reduce-done(ars)
+}
+"""
+
+# bounded-dynamic dims from a padded/donated serving module
+BOUNDED = """
+ENTRY main (p0: f32[<=8,4]) -> f32[<=8,4] {
+  p0 = f32[<=8,4]{1,0} parameter(0)
+  ROOT neg = f32[<=8,4]{1,0} negate(p0)
+}
+"""
+
+
+def test_classic_def_and_operands():
+    instrs = hlo._parse_instructions(CLASSIC)
+    by_name = {i.name: i for i in instrs}
+    assert by_name["dot.1"].operands == ["p0", "p1"]
+    # tuple result with /*index=N*/ comments: both member shapes parsed
+    tup = by_name["tup"]
+    assert tup.op == "tuple"
+    assert ("f32", [128, 64]) in tup.shapes and ("f32", [128]) in tup.shapes
+    assert tup.operands == ["ag", "red"]
+
+
+def test_bare_name_defs_not_dropped():
+    """Post-SPMD dumps print `name = ...` without `%` — every instruction
+    must still parse, with operands recovered from the call body."""
+    instrs = hlo._parse_instructions(BARE)
+    by_name = {i.name: i for i in instrs}
+    assert set(by_name) == {"p0", "p1", "dot.1", "c1", "b1", "scaled",
+                            "ars", "ard"}
+    assert by_name["dot.1"].operands == ["p0", "p1"]
+    assert by_name["scaled"].operands == ["dot.1", "b1"]
+    # constant(2.5): the literal is not an operand name
+    assert by_name["c1"].operands == []
+
+
+def test_dot_flops_same_both_spellings():
+    want = 2.0 * 128 * 64 * 256
+    assert hlo.collect_dot_flops(CLASSIC) == want
+    assert hlo.collect_dot_flops(BARE) == want
+
+
+def test_collectives_both_spellings():
+    c = hlo.collect_collectives(CLASSIC)
+    assert c.count_by_kind == {"all-gather": 1}
+    assert c.bytes_by_kind["all-gather"] == 128 * 64 * 4
+    b = hlo.collect_collectives(BARE)
+    # async start/done pair counts once, on the start half
+    assert b.count_by_kind == {"all-reduce": 1}
+    assert b.bytes_by_kind["all-reduce"] == 128 * 64 * 4
+
+
+def test_bounded_dynamic_dims_count_at_bound():
+    instrs = hlo._parse_instructions(BOUNDED)
+    by_name = {i.name: i for i in instrs}
+    assert by_name["neg"].shapes == [("f32", [8, 4])]
+    assert hlo._shape_list_bytes(by_name["neg"].shapes) == 8 * 4 * 4
+
+
+def test_census_bare_spelling():
+    cen = hlo.census(BARE)
+    assert cen.op_counts["dot"] == 1
+    assert cen.op_counts["multiply"] == 1
+
+
+def test_core_shim_reexports():
+    """serve/dist/roofline keep importing from repro.core.hlo_analysis —
+    the shim must expose the same objects (not copies)."""
+    from repro.core import hlo_analysis as shim
+    for name in hlo.__all__:
+        assert getattr(shim, name) is getattr(hlo, name), name
+    # private helpers some callers/tests reach for are re-exported too
+    assert shim._parse_instructions is hlo._parse_instructions
+    assert shim._split_computations is hlo._split_computations

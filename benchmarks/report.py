@@ -70,9 +70,10 @@ LOWER_BETTER = ("us_per_call", "step_s", "modeled_s", "cpu_ms", "compute_s",
                 "memory_s", "measured_us", "gib", "vmem_mib", "bytes",
                 "ttft", "tpot", "queue_depth", "wasted_toks",
                 "shed", "deadline_miss", "retries_per_request",
-                "recovery_ticks", "brownout")
+                "recovery_ticks", "brownout", "abs_err")
 HIGHER_BETTER = ("tflops", "pct_vpu_peak", "roofline", "speedup",
-                 "goodput", "tok_per_tick")
+                 "goodput", "tok_per_tick", "hit_rate", "saved",
+                 "reduction", "bitexact", "agree_frac")
 # wall-clock metrics are machine-dependent noise across CI hosts: excluded
 # from the gate unless --include-wallclock. The router's tick-denominated
 # SLO metrics (ttft_ticks/tpot_ticks/queue_depth/goodput_toks) are

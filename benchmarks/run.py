@@ -37,6 +37,15 @@ Tables:
                          goodput-under-burst, per-replica rows. Shortcut:
                          --router [--replicas N] [--fault kill:R@T or
                          stall:R@T+D].
+  kvcache              — paged K/V cache rows (serve/kvcache.py) under a
+                         shared-system-prompt trace: prefix hit rate +
+                         prefill tokens saved, measured bytes/slot vs the
+                         static layout, paged-vs-static bit-exactness,
+                         the int8 pool's pinned attention error, the
+                         tuned paged_decode kernel pick, and the fleet
+                         hit rate across router replicas. All token/page
+                         counts are deterministic and gateable. Shortcut:
+                         --kvcache (composable with --serve).
 """
 
 from __future__ import annotations
@@ -459,6 +468,113 @@ def router():
          f"p99_ttft_ticks={sr['p99_ttft_ticks']:.2f}")
 
 
+def kvcache():
+    """Paged-K/V rows: one shared-prompt workload served three ways (cold
+    static cache, paged bf16, paged int8) plus the registry-routed
+    paged_decode kernel. Hit rates, token counts, page accounting, and
+    the kernel error bounds are deterministic per seed; only the
+    us_per_call column is wall clock."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import get_config, reduce_config
+    from repro.kernels import api
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.router import Router
+    from repro.serve.trace import TraceConfig, generate_trace
+    from repro.tune import tuner
+
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=2, d_model=64,
+                        vocab=128)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    # 90% of requests share one of two 16-token system prompts: the
+    # workload shape the prefix index exists for (greedy sampling so the
+    # paged-vs-static compare is a bit-exactness check, not a similarity)
+    trace = generate_trace(TraceConfig(
+        n_requests=16, rate_rps=16.0, prompt_median=6, prompt_sigma=0.6,
+        prompt_max=16, out_median=6, out_sigma=0.6, out_max=16,
+        temperatures=(0.0,), vocab=128, seed=0,
+        shared_prefix_frac=0.9, prefix_pool=2, prefix_len=16))
+    reqs = trace.plain_requests()
+
+    base = ServeEngine(cfg, params, max_batch=4, cache_len=64)
+    out_base, _ = base.run(reqs, collect_stats=True)
+
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64,
+                      kv_page_size=8)
+    out_paged, stats = eng.run(reqs, collect_stats=True)
+    eng.kv.check_conservation()
+    kv = stats["engine"]["kvcache"]
+    _csv("kvcache_engine", stats["engine"]["wall_s"] * 1e6,
+         f"page_size={kv['page_size']};"
+         f"prefix_hit_rate={kv['prefix_hit_rate']:.3f};"
+         f"prefill_tokens_saved={kv['prefill_tokens_saved']};"
+         f"peak_live_pages={kv['peak_live_pages']};"
+         f"page_occupancy={kv['page_occupancy']:.3f}")
+    _csv("kvcache_bytes", None,
+         f"kv_bytes_per_slot={kv['kv_bytes_per_slot']:.0f};"
+         f"static_bytes_per_slot={kv['static_bytes_per_slot']};"
+         f"bytes_per_slot_reduction={kv['bytes_per_slot_reduction']:.3f}")
+    exact = sum(np.array_equal(out_base[r], out_paged[r]) for r in out_base)
+    _csv("kvcache_parity", None,
+         f"bitexact_frac={exact / len(out_base):.3f};"
+         f"requests={len(out_base)};"
+         f"tokens={sum(len(t) for t in out_base.values())}")
+
+    # int8 pool: token agreement vs the bf16 baseline (informational
+    # similarity — int8 is lossy by design) + the pinned attention-level
+    # error of the quantized kernel route at the canonical shape
+    eng8 = ServeEngine(cfg, params, max_batch=4, cache_len=64,
+                       kv_page_size=8, kv_dtype="int8")
+    out8, _ = eng8.run(reqs, collect_stats=True)
+    agree = sum(np.array_equal(out_base[r], out8[r]) for r in out_base)
+    ks = api.get_kernel("paged_decode")
+    key = ks.canonical_keys()[0]
+    (q, kp, vp, tbl, cl), _kw = ks.make_example(key)
+    ref = api.dispatch("paged_decode", q, kp, vp, tbl, cl, version="ref")
+    i8 = api.dispatch("paged_decode", q, kp, vp, tbl, cl, version="int8")
+    err8 = float(jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                 - i8.astype(jnp.float32))))
+    _csv("kvcache_int8", None,
+         f"token_agree_frac={agree / len(out_base):.3f};"
+         f"attn_max_abs_err={err8:.4g}")
+
+    # the registry route: tuned pages_per_block pick (model-ranked, same
+    # determinism rationale as gpp_tuner) + gather-vs-oracle error
+    tc = tuner.tune_kernel("paged_decode", key, use_cache=False,
+                           measure_mode=False)
+    gat = api.dispatch("paged_decode", q, kp, vp, tbl, cl,
+                       version="gather", config=tc.config)
+    errg = float(jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                 - gat.astype(jnp.float32))))
+    _csv("kvcache_kernel", None,
+         f"pages_per_block={tc.config.pages_per_block};"
+         f"modeled_s={tc.modeled_s:.4g};gather_max_abs_err={errg:.4g};"
+         f"source={tc.source}",
+         kernel_config={"kernel": "paged_decode",
+                        "version": tc.key.split("|")[-1],
+                        "config": dataclasses.asdict(tc.config),
+                        "source": tc.source})
+
+    # fleet view: replica-local pools/indexes — the shared prompt
+    # prefills once PER REPLICA, so the fleet hit rate sits below a
+    # single engine's on the same trace (docs/serving.md §Paged K/V)
+    rt = Router(cfg, params, replicas=2, max_batch=4, cache_len=64,
+                kv_page_size=8)
+    _, rs = rt.run(trace, tick_s=0.05)
+    rkv = rs["kvcache"]
+    _csv("kvcache_router", None,
+         f"replicas=2;prefix_hit_rate={rkv['prefix_hit_rate']:.3f};"
+         f"prefill_tokens_saved={rkv['prefill_tokens_saved']};"
+         f"pages_allocated={rkv['pages_allocated']};"
+         f"pages_freed={rkv['pages_freed']}")
+
+
 TABLES = {
     "gpp_journey": table1_gpp_journey,
     "roofline_terms": fig_roofline_terms,
@@ -470,6 +586,7 @@ TABLES = {
     "train_step_cpu": train_step_cpu,
     "serve": serve,
     "router": router,
+    "kvcache": kvcache,
 }
 
 # the cheap, deterministic-model subset CI benchmarks and the committed
@@ -495,6 +612,10 @@ def main() -> None:
     ap.add_argument("--router", action="store_true",
                     help="shortcut for --only router (multi-replica DP "
                          "router SLO rows)")
+    ap.add_argument("--kvcache", action="store_true",
+                    help="add the kvcache table (paged K/V cache rows; "
+                         "alone it runs just that table, with --serve it "
+                         "rides along)")
     ap.add_argument("--replicas", type=int, default=2, metavar="N",
                     help="with --router: number of replica engines "
                          "(default 2)")
@@ -507,7 +628,7 @@ def main() -> None:
     elif args.serve:
         todo = ["serve"]
     elif args.only is None:
-        todo = list(TABLES)
+        todo = ["kvcache"] if args.kvcache else list(TABLES)
     elif args.only == "fast":
         todo = list(FAST_TABLES)
     else:
@@ -544,6 +665,8 @@ def main() -> None:
     if args.fault:
         _parse_fault(args.fault)        # validate up front: SystemExit here
         ROUTER_FAULT = args.fault       # beats a traceback mid-table
+    if args.kvcache and "kvcache" not in todo:
+        todo.append("kvcache")
     print("name,us_per_call,derived")
     for name in todo:
         TABLES[name]()

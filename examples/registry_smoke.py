@@ -25,7 +25,7 @@ def check(name: str, outs, refs, atol: float) -> None:
 def main():
     names = repro.list_kernels()
     print(f"registered kernels: {names}")
-    assert {"gpp", "flash", "ssm"} <= set(names), names
+    assert {"gpp", "flash", "ssm", "paged_decode"} <= set(names), names
 
     # gpp at TINY vs the complex128 oracle
     from repro.kernels.gpp import problem, ref
@@ -50,6 +50,14 @@ def main():
     y, hT = repro.dispatch("ssm", *sargs, interpret=True)
     y_ref, hT_ref = repro.dispatch("ssm", *sargs, version="ref")
     check("ssm pallas@32", (y, hT), (y_ref, hT_ref), atol=1e-3)
+
+    # paged_decode: block-table gather decode vs its gather+oracle ref
+    from repro.kernels.paged.kernel_def import PagedKey
+    pkey = PagedKey(b=2, h=2, kvh=2, page=16, npt=4, hd=32)
+    pargs, pkw = api.get_kernel("paged_decode").make_example(pkey)
+    pd = repro.dispatch("paged_decode", *pargs, interpret=True, **pkw)
+    pd_ref = repro.dispatch("paged_decode", *pargs, version="ref", **pkw)
+    check("paged_decode gather@16x4", (pd,), (pd_ref,), atol=1e-2)
 
     print("registry smoke: all kernels dispatch and match their references")
 

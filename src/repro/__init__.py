@@ -16,6 +16,10 @@ carries a full docstring with a runnable example at its definition —
     ServeEngine(cfg, params, max_batch=, cache_len=, mesh=) / Request
         Slot-level continuous-batching server; pass mesh= to serve
         tensor-parallel over a repro.dist mesh (docs/serving.md).
+    PagedKVCache
+        Paged K/V storage behind ServeEngine(kv_page_size=): block
+        tables, FIFO free-list, refcounted prefix reuse, optional int8
+        pages (docs/serving.md §Paged K/V cache).
     Router(cfg, params, replicas=, fault_plan=) / FaultPlan
         DP router over N replica engines with heartbeat failover,
         deterministic fault injection + recovery (FaultPlan.recover/
@@ -38,7 +42,7 @@ carries a full docstring with a runnable example at its definition —
         gate, `python -m repro.tune validate|prune` the cache hygiene).
 
     import repro
-    repro.list_kernels()                       # ['flash', 'gpp', 'ssm']
+    repro.list_kernels()          # ['flash', 'gpp', 'paged_decode', 'ssm']
     ach, asx = repro.dispatch("gpp", inputs, version="v10")
     k = repro.get_kernel("flash")              # Kernel descriptor
     model = repro.build_model(cfg)
@@ -56,6 +60,7 @@ _EXPORTS = {
     "list_kernels": "repro.kernels.api",
     "ServeEngine": "repro.serve.engine",
     "Request": "repro.serve.engine",
+    "PagedKVCache": "repro.serve.kvcache",
     "Router": "repro.serve.router",
     "FaultPlan": "repro.serve.router",
     "OverloadConfig": "repro.serve.router",

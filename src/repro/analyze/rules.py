@@ -14,6 +14,10 @@ on any `error`-severity finding:
   MODEL001 error    declared model_step_s below DRIFT_TOL x the
                     census-derived roofline bound (model drift: the model
                     promises more than the hardware ceilings allow)
+  KV001    error    kernel declares block-table gather buffers
+                    (`gather_buffer_bytes`) its `config_vmem_bytes`
+                    working set does not cover — the config would pass
+                    VMEM001 while overflowing VMEM at runtime
 
 Adding a rule: give it an ID here in `RULES`, emit `Finding`s from
 `audit_kernel` (per-kernel rules) or a new collector wired into
@@ -38,6 +42,7 @@ RULES: Dict[str, Tuple[str, str]] = {
     "DUP001": (SEV_WARNING, "duplicate expensive computation"),
     "CACHE001": (SEV_ERROR, "stale tuned-config cache entry"),
     "MODEL001": (SEV_ERROR, "model drift vs census roofline bound"),
+    "KV001": (SEV_ERROR, "VMEM model ignores block-table gather buffers"),
 }
 
 # DUP001 fires when recomputed FLOPs exceed this fraction of the census
@@ -98,6 +103,14 @@ def audit_kernel(kernel, version: str, key, *, hw=TPU_V5E
             findings.append(_finding(
                 "BLK001", k.name, version, kd,
                 f"clamped config cannot tile problem: {violation}"))
+        gather = k.gather_buffer_bytes(clamped, key)
+        if gather is not None and (vmem is None or vmem < gather):
+            findings.append(_finding(
+                "KV001", k.name, version, kd,
+                f"declared gather buffers need {gather} B but the config "
+                f"VMEM model covers "
+                f"{'nothing' if vmem is None else f'only {vmem} B'}",
+                gather_bytes=gather, vmem_bytes=vmem))
 
     allowed = k.allowed_float_dtypes(version)
     if allowed:

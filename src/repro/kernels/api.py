@@ -138,6 +138,16 @@ class Kernel:
         auditor's VMEM001 rule. None = no VMEM model for this family."""
         return None
 
+    def gather_buffer_bytes(self, config: Any, key: "ProblemKey"
+                            ) -> Optional[int]:
+        """For kernels that gather operands through an index (paged decode's
+        block-table K/V fetch): the double-buffered gather-block bytes that
+        MUST be part of `config_vmem_bytes`. The auditor's KV001 rule flags
+        a kernel that declares gather buffers its VMEM model doesn't cover
+        (the working set would pass VMEM001 while overflowing at runtime).
+        None = the family gathers nothing (no check)."""
+        return None
+
     def config_divides(self, config: Any, key: "ProblemKey") -> List[str]:
         """Divisibility violations of `config` at `key` — one human-readable
         string per axis the blocks cannot tile (BLK001 is raised for each).
@@ -191,6 +201,7 @@ def _ensure_builtins() -> None:
         return
     from repro.kernels.flash import kernel_def as _f    # noqa: F401
     from repro.kernels.gpp import kernel_def as _g      # noqa: F401
+    from repro.kernels.paged import kernel_def as _p    # noqa: F401
     from repro.kernels.ssm import kernel_def as _s      # noqa: F401
     _BUILTINS_LOADED = True
 

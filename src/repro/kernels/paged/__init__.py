@@ -1,0 +1,2 @@
+"""Paged decode attention: block-table K/V gather for the serve pool
+(serve/kvcache.py), registered as the `paged_decode` kernel family."""

@@ -1,0 +1,233 @@
+"""`paged_decode` family registration for the unified kernel registry.
+
+The paged serving cache (serve/kvcache.py) stores K/V as fixed-size pages
+addressed through per-request block tables, so its decode attention is a
+GATHER-then-contract problem — a different roofline from the dense-cache
+`flash` family: the K/V traffic is the whole visited context again every
+step, fetched page-by-page through the table, and the VMEM working set is
+the gathered block, not the context. This descriptor gives that route the
+same journey the other families got:
+
+  * `PagedKey` — (b, h, kvh, page, npt, hd): the pool page size and the
+    block-table length are part of the problem, not the config;
+  * `PagedBlockConfig(pages_per_block)` — how many pages each online-
+    softmax step gathers: bigger blocks amortize per-step overhead,
+    smaller blocks shrink the gather buffer (the tuner's tradeoff);
+  * versions ("ref", "gather", "int8"): full-gather oracle, blockwise
+    bf16, blockwise int8 with per-page dequant scales (the quantized
+    route the serve pool's `kv_dtype="int8"` feeds);
+  * `gather_buffer_bytes` — the auditor hook behind the KV001 rule: a
+    paged kernel whose VMEM model forgets the gather buffers would pass
+    VMEM001 while overflowing VMEM at runtime, so `config_vmem_bytes`
+    here includes them and KV001 cross-checks that it does.
+
+Model assumptions: K/V bytes re-fetched per decode step (no residency
+across steps — the cache outgrows VMEM by construction), f32 compute on
+bf16/int8 operands, SCAN_OVERHEAD_S per gather block (the loop is an XLA
+scan, not a Pallas grid).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hw import TPU_V5E
+from repro.core.vpu_model import PASS_RATE, SCAN_OVERHEAD_S
+from repro.kernels import api
+from repro.kernels.paged import paged as paged_lib
+
+PPB_MENU = (1, 2, 4, 8, 16)
+SOFTMAX_PASSES = 12.0          # exp + max/sum/online-rescale per score
+BF16 = 2
+F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKey:
+    """ProblemKey for one paged decode layer: B rows of one token each
+    attending over npt pages of `page` K/V lines from the pool."""
+    b: int
+    h: int
+    kvh: int
+    page: int
+    npt: int
+    hd: int
+    name: str = "paged_decode"
+
+    def key_dims(self) -> str:
+        return (f"{self.b}x{self.h}x{self.kvh}x{self.page}"
+                f"x{self.npt}x{self.hd}")
+
+
+def _div_clamp(blk: int, n: int) -> int:
+    """Largest block <= blk that exactly tiles n (flash's rule: a plain
+    min() on a non-dividing count would drop tail pages silently)."""
+    blk = min(blk, n)
+    while n % blk:
+        blk -= 1
+    return blk
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedBlockConfig:
+    name: str = "paged"
+    pages_per_block: int = 8
+
+    def clamped(self, key: PagedKey) -> "PagedBlockConfig":
+        return dataclasses.replace(
+            self, pages_per_block=_div_clamp(self.pages_per_block, key.npt))
+
+
+def _gather_bytes(cfg: PagedBlockConfig, key: PagedKey,
+                  itemsize: int = BF16) -> int:
+    """Double-buffered K+V gather block: the bytes KV001 exists for."""
+    return 2 * key.b * cfg.pages_per_block * key.page * key.kvh \
+        * key.hd * itemsize * 2
+
+
+class PagedDecodeKernel(api.Kernel):
+    name = "paged_decode"
+    versions = ("ref", "gather", "int8")
+    default_version = "gather"
+    tunable = ("gather", "int8")
+
+    def problem_key(self, q, kpool, vpool, block_table, cache_len,
+                    **kwargs) -> PagedKey:
+        b, h, hd = q.shape
+        _, page, kvh, _ = kpool.shape
+        return PagedKey(b=b, h=h, kvh=kvh, page=page,
+                        npt=block_table.shape[1], hd=hd)
+
+    def config_space(self, key: PagedKey, version: str
+                     ) -> List[PagedBlockConfig]:
+        if version == "ref":
+            return []
+        out = []
+        for ppb in PPB_MENU:
+            if ppb > key.npt or key.npt % ppb:
+                continue
+            cfg = PagedBlockConfig("tune", ppb)
+            if self.config_vmem_bytes(cfg, key) <= TPU_V5E.vmem_bytes:
+                out.append(cfg)
+        return out
+
+    def clamp(self, config: PagedBlockConfig, key: PagedKey
+              ) -> PagedBlockConfig:
+        return config.clamped(key)
+
+    def static_config(self, key: PagedKey, version: str
+                      ) -> Optional[PagedBlockConfig]:
+        return PagedBlockConfig().clamped(key)
+
+    def tie_break(self, config: PagedBlockConfig) -> Tuple:
+        # bigger blocks first: fewer scan steps at equal modeled time
+        return (-config.pages_per_block,)
+
+    def finalize_config(self, config: PagedBlockConfig, version: str
+                        ) -> PagedBlockConfig:
+        return dataclasses.replace(config, name=version)
+
+    def model_step_s(self, key: PagedKey, config: PagedBlockConfig,
+                     version: str) -> float:
+        cfg = config.clamped(key)
+        ctx = key.npt * key.page                     # gathered context lines
+        kv_item = 1 if version == "int8" else BF16
+        flops = 4.0 * key.b * key.h * ctx * key.hd   # qk^T + pv, 2 each
+        mxu_s = flops / TPU_V5E.mxu_flops
+        vpu_s = key.b * key.h * ctx * SOFTMAX_PASSES / PASS_RATE
+        n_blocks = key.npt // cfg.pages_per_block
+        overhead_s = n_blocks * SCAN_OVERHEAD_S
+        bytes_ = (2 * key.b * ctx * key.kvh * key.hd * kv_item   # k + v
+                  + 2 * key.b * key.h * key.hd * BF16)           # q, out
+        return max(mxu_s + vpu_s + overhead_s, bytes_ / TPU_V5E.hbm_bw)
+
+    def measure_ok(self, key: PagedKey) -> bool:
+        return key.b * key.h * key.npt * key.page * key.hd <= 1 << 20
+
+    def make_example(self, key: PagedKey, seed: int = 0
+                     ) -> Tuple[tuple, dict]:
+        # pool sized exactly b*npt pages with a disjoint identity table:
+        # census HBM traffic == the traffic one decode step actually
+        # gathers, so the MODEL001 drift check compares like with like
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        n_pages = key.b * key.npt
+        q = jax.random.normal(ks[0], (key.b, key.h, key.hd), jnp.bfloat16)
+        kpool = jax.random.normal(
+            ks[1], (n_pages, key.page, key.kvh, key.hd), jnp.bfloat16)
+        vpool = jax.random.normal(
+            ks[2], (n_pages, key.page, key.kvh, key.hd), jnp.bfloat16)
+        table = jnp.arange(n_pages, dtype=jnp.int32).reshape(key.b, key.npt)
+        ctx = key.npt * key.page
+        cache_len = (ctx - (jnp.arange(key.b, dtype=jnp.int32)
+                            % max(ctx - 1, 1)))
+        return (q, kpool, vpool, table, cache_len), {}
+
+    def config_from_json(self, d: Dict) -> PagedBlockConfig:
+        return PagedBlockConfig(**d)
+
+    # -- static-analysis hooks (repro.analyze) -----------------------------
+    def canonical_keys(self) -> List[PagedKey]:
+        return [PagedKey(b=2, h=2, kvh=2, page=16, npt=4, hd=32)]
+
+    def key_from_dims(self, dims: str) -> PagedKey:
+        b, h, kvh, page, npt, hd = (int(d) for d in dims.split("x"))
+        return PagedKey(b=b, h=h, kvh=kvh, page=page, npt=npt, hd=hd)
+
+    def config_vmem_bytes(self, config: PagedBlockConfig, key: PagedKey
+                          ) -> int:
+        span = config.pages_per_block * key.page
+        resident = (key.b * key.h * key.hd * F32 * 2      # q (f32), acc
+                    + 2 * key.b * key.h * F32             # l, m stats
+                    + key.b * key.h * span * F32)         # score block
+        return self.gather_buffer_bytes(config, key) + resident
+
+    def gather_buffer_bytes(self, config: PagedBlockConfig, key: PagedKey
+                            ) -> int:
+        return _gather_bytes(config, key)
+
+    def config_divides(self, config: PagedBlockConfig, key: PagedKey
+                       ) -> List[str]:
+        ppb = config.pages_per_block
+        if ppb <= 0 or key.npt % ppb:
+            return [f"npt={key.npt} not tiled by pages_per_block {ppb}"]
+        return []
+
+    def allowed_float_dtypes(self, version: str) -> frozenset:
+        # bf16 operands, f32 scores/stats/accumulator (all versions; the
+        # int8 pool itself is integer, outside the float-leak check)
+        return frozenset({"bfloat16", "float32"})
+
+    def run(self, q, kpool, vpool, block_table, cache_len, *, version: str,
+            config: Optional[PagedBlockConfig], interpret: Optional[bool],
+            kscale=None, vscale=None):
+        """q: (B,H,Hd); pools: (P,page,KvH,Hd); block_table: (B,npt) int32;
+        cache_len: (B,) -> (B,H,Hd). All versions are pure JAX (`interpret`
+        accepted for protocol symmetry, nothing to toggle). The int8
+        version takes per-page `kscale`/`vscale` (serve pool layout); given
+        a float pool it quantizes on the fly — the self-contained form the
+        auditor traces and tests compare against."""
+        if version == "ref":
+            return paged_lib.paged_decode_ref(q, kpool, vpool, block_table,
+                                              cache_len)
+        key = self.problem_key(q, kpool, vpool, block_table, cache_len)
+        cfg = (config or PagedBlockConfig()).clamped(key)
+        if version == "gather":
+            return paged_lib.paged_decode_gather(
+                q, kpool, vpool, block_table, cache_len,
+                pages_per_block=cfg.pages_per_block)
+        if jnp.issubdtype(kpool.dtype, jnp.floating):
+            kpool, kscale = paged_lib.quantize_pool(kpool)
+            vpool, vscale = paged_lib.quantize_pool(vpool)
+        elif kscale is None or vscale is None:
+            raise ValueError("paged_decode int8 needs kscale/vscale for an "
+                             "int8 pool")
+        return paged_lib.paged_decode_int8(
+            q, kpool, vpool, block_table, cache_len, kscale, vscale,
+            pages_per_block=cfg.pages_per_block)
+
+
+KERNEL = api.register(PagedDecodeKernel())

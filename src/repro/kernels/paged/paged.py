@@ -1,0 +1,143 @@
+"""Paged decode-attention implementations (pure JAX, registry-routed).
+
+The serving engine's page pool (serve/kvcache.py) stores K/V lines as
+fixed-size pages; a request's context is the concatenation of the pages
+its block table names. Decode attention over that layout must GATHER
+before it can contract — these implementations are the kernel side of
+that contract, one layer at a time:
+
+  q            (B, H, Hd)            one decode token per row
+  kpool/vpool  (P, page, KvH, Hd)    the page pool (bf16; int8 + scales
+                                     for the quantized route)
+  block_table  (B, npt) int32        page ids per row, in context order
+                                     (entries past the valid length may
+                                     be any in-range id — masking wins)
+  cache_len    (B,) int32            valid context tokens per row
+
+Three versions, reference -> fastest (kernel_def.py registers them):
+
+  * `paged_decode_ref`    — gather the WHOLE table, then run the exact
+    `models.attention.decode_attention` math: the oracle the blockwise
+    versions are tested against.
+  * `paged_decode_gather` — lax.scan over blocks of `pages_per_block`
+    pages with an online-softmax accumulator (m, l, acc in f32): only
+    one gathered block is live at a time, so the VMEM working set is
+    the block, not the context (the tuner's knob).
+  * `paged_decode_int8`   — the gather loop over an int8 pool: each
+    gathered page dequantizes with its per-page scale
+    (serve.kvcache.quantize_page granule) before the contraction.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import NEG_INF, decode_attention
+from repro.models.layers import PARAM_DTYPE
+
+INT8_MAX = 127.0
+
+
+def gather_pages(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """(P,page,KvH,Hd)[(B,npt)] -> (B, npt*page, KvH, Hd), context order."""
+    b, npt = block_table.shape
+    _, page, kvh, hd = pool.shape
+    flat = jnp.take(pool, block_table.reshape(-1), axis=0)
+    return flat.reshape(b, npt * page, kvh, hd)
+
+
+def quantize_pool(pool: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Vectorized serve.kvcache.quantize_page over a whole pool: one
+    symmetric f32 scale per page. Returns (int8 pool, (P,) scales)."""
+    f = pool.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(f), axis=(1, 2, 3))
+    scale = jnp.maximum(amax, 1e-8) / INT8_MAX
+    q = jnp.clip(jnp.round(f / scale[:, None, None, None]),
+                 -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def paged_decode_ref(q, kpool, vpool, block_table, cache_len) -> jax.Array:
+    """Full-gather oracle: materialize the context, defer to the serving
+    path's own decode_attention (identical masking and accumulation)."""
+    k = gather_pages(kpool, block_table)
+    v = gather_pages(vpool, block_table)
+    return decode_attention(q[:, None], k, v, cache_len)[:, 0]
+
+
+def _online_block_scan(q, block_table, cache_len, load_block, *,
+                       pages_per_block: int, page: int, kvh: int):
+    """Shared online-softmax loop: `load_block(ids) -> (kb, vb)` yields
+    one gathered (B, ppb*page, KvH, Hd) f32 block per step."""
+    b, h, hd = q.shape
+    npt = block_table.shape[1]
+    n_blocks = npt // pages_per_block
+    span = pages_per_block * page
+    g = h // kvh
+    scale = hd ** -0.5
+    qr = q.reshape(b, kvh, g, hd).astype(jnp.float32)
+
+    def body(carry, bi):
+        m, l, acc = carry
+        ids = jax.lax.dynamic_slice_in_dim(
+            block_table, bi * pages_per_block, pages_per_block, axis=1)
+        kb, vb = load_block(ids)
+        pos = bi * span + jnp.arange(span)
+        valid = pos[None, :] < cache_len[:, None]                # (B, span)
+        s = jnp.einsum("bkgd,bskd->bkgs", qr, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))              # (B,KvH,G)
+        e = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(e, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgs,bskd->bkgd", e, vb, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, kvh, g), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g), jnp.float32),
+            jnp.zeros((b, kvh, g, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(b, h, hd).astype(PARAM_DTYPE)
+
+
+def paged_decode_gather(q, kpool, vpool, block_table, cache_len, *,
+                        pages_per_block: int) -> jax.Array:
+    """Blockwise gather + online softmax over a full-precision pool."""
+    _, page, kvh, hd = kpool.shape
+
+    def load_block(ids):
+        kb = gather_pages(kpool, ids).astype(jnp.float32)
+        vb = gather_pages(vpool, ids).astype(jnp.float32)
+        return kb, vb
+
+    return _online_block_scan(q, block_table, cache_len, load_block,
+                              pages_per_block=pages_per_block, page=page,
+                              kvh=kvh)
+
+
+def paged_decode_int8(q, kpool, vpool, block_table, cache_len,
+                      kscale, vscale, *, pages_per_block: int) -> jax.Array:
+    """Blockwise gather over an int8 pool: per-page dequantization inside
+    the loop, so only one block ever exists at full precision."""
+    _, page, kvh, hd = kpool.shape
+
+    def load_block(ids):
+        b, ppb = ids.shape
+
+        def deq(pool, scales):
+            blk = jnp.take(pool, ids.reshape(-1), axis=0)   # (B*ppb,pg,kvh,hd)
+            s = jnp.take(scales, ids.reshape(-1), axis=0)   # (B*ppb,)
+            f = blk.astype(jnp.float32) * s[:, None, None, None]
+            return f.reshape(b, ppb * page, kvh, hd)
+
+        return deq(kpool, kscale), deq(vpool, vscale)
+
+    return _online_block_scan(q, block_table, cache_len, load_block,
+                              pages_per_block=pages_per_block, page=page,
+                              kvh=kvh)

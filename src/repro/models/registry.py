@@ -41,6 +41,11 @@ class Model:
     prefill_into_slot: Callable[..., Tuple[jax.Array, PyTree]]
     init_cache: Callable[..., PyTree]
     cache_axes: Callable[..., PyTree]
+    # suffix-only prefill continuing from cached prefix K/V lines (paged
+    # K/V cache prefix reuse — serve/kvcache.py). None for families whose
+    # prefill is not suffix-separable (recurrent state, vis/enc prefixes,
+    # token-count-sensitive MoE capacity).
+    prefill_continue: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
 
 
 # ===========================================================================
@@ -713,6 +718,51 @@ def build_model(cfg: ModelConfig) -> Model:
             new[key] = jax.lax.dynamic_update_slice(full, upd, starts)
         return logits, new
 
+    # ---- prefix-continue prefill (paged K/V prefix reuse) --------------------
+
+    def prefill_continue(params, cache, slot, batch, start, n_real,
+                         ctx: Optional[DistCtx] = None):
+        """Prefill ONLY the unseen suffix of a request whose first `start`
+        prompt positions already sit in `slot`'s cache rows (restored from
+        shared prefix pages — serve/kvcache.py). Dense family only: the
+        suffix hidden states depend on the prefix exclusively through the
+        cached K/V (causal attention), so continuing from restored lines is
+        bit-identical to a cold full-prompt prefill.
+
+        batch["tokens"]: (1, S) suffix tokens, right-padded to a shape
+        bucket like prefill_into_slot (pad lines land beyond the real
+        suffix and stay masked by the per-row pos). start: (traced) count
+        of already-cached prompt positions. n_real: (traced) real suffix
+        length; logits are taken at suffix index n_real - 1 and the slot's
+        pos becomes start + n_real.
+        """
+        assert cfg.family == "dense", (
+            "prefill_continue is only defined for pure-attention decoder "
+            f"stacks (suffix-separable prefill): {cfg.family}")
+        x = embed(batch["tokens"], params["embed"])
+        s = x.shape[1]
+        positions = start + jnp.arange(s)
+
+        def body(carry, inp):
+            x = carry
+            lp, ck, cv = inp
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, (ck, cv) = T.attn_block_continue(
+                lp["attn"], h, cfg, cache_k=ck, cache_v=cv, slot=slot,
+                start=start, positions=positions, ctx=ctx)
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            f = swiglu(h, lp["ffn"]["wi"], lp["ffn"]["wg"], lp["ffn"]["wo"])
+            return x + f, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs,
+                     "pos": cache["pos"].at[slot].set(
+                         jnp.asarray(start + n_real, cache["pos"].dtype))}
+        last = jax.lax.dynamic_slice_in_dim(x, n_real - 1, 1, axis=1)
+        return _logits(params, last), new_cache
+
     return Model(
         cfg=cfg,
         param_axes=param_axes,
@@ -724,4 +774,6 @@ def build_model(cfg: ModelConfig) -> Model:
         prefill_into_slot=prefill_into_slot,
         init_cache=functools.partial(make_cache, cfg),
         cache_axes=functools.partial(cache_logical_axes, cfg),
+        prefill_continue=(prefill_continue if cfg.family == "dense"
+                          else None),
     )

@@ -318,6 +318,43 @@ def attn_block_decode(lp, x, cfg: ModelConfig, *, cache_k, cache_v, pos,
     return out, (cache_k, cache_v)
 
 
+def attn_block_continue(lp, x, cfg: ModelConfig, *, cache_k, cache_v, slot,
+                        start, positions, ctx=None):
+    """Suffix attention for prefix-continue prefill (paged K/V cache with
+    prefix reuse — serve/kvcache.py). x: (1,S,D) suffix hidden states whose
+    first token sits at absolute position `start`; cache_k/v: batched
+    (B,Lcache,KvH,Hd) slot caches whose `slot` row already holds the first
+    `start` K/V lines (restored prefix pages).
+
+    The suffix k/v are written into the slot row at `start` and the queries
+    attend against the FULL row with q_offset=start: keys at absolute
+    positions > each query are causally masked, so stale lines beyond the
+    written region contribute exact-0 softmax weight and the output is
+    bit-identical to a cold full-prompt prefill of the same row (the
+    chunked_causal_attention masking contract). Returns (out, (ck, cv))
+    with the slot row updated.
+    """
+    b_, s, _ = x.shape
+    assert b_ == 1
+    q, k, v = _qkv(lp, x, cfg)
+    if cfg.rope_theta:
+        q = apply_rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+    row_k = jax.lax.dynamic_index_in_dim(cache_k, slot, axis=0, keepdims=True)
+    row_v = jax.lax.dynamic_index_in_dim(cache_v, slot, axis=0, keepdims=True)
+    row_k = jax.lax.dynamic_update_slice(row_k, k.astype(row_k.dtype),
+                                         (0, start, 0, 0))
+    row_v = jax.lax.dynamic_update_slice(row_v, v.astype(row_v.dtype),
+                                         (0, start, 0, 0))
+    out = attn_lib.chunked_causal_attention(q, row_k, row_v, q_offset=start)
+    out = matmul_rp(out.reshape(b_, s, -1), lp["wo"])
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, row_k, (slot,) + (0,) * (cache_k.ndim - 1))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, row_v, (slot,) + (0,) * (cache_v.ndim - 1))
+    return out, (cache_k, cache_v)
+
+
 def rwkv_time_mix(tm, x, shift_in, wkv_state, cfg: ModelConfig, *,
                   decode: bool):
     """RWKV6 time-mix. x: (B,T,D). Returns (out, last_token, new_state)."""

@@ -229,12 +229,26 @@ class ServeEngine:
     """
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
-                 cache_len: int = 512, rng_seed: int = 0, mesh=None):
+                 cache_len: int = 512, rng_seed: int = 0, mesh=None,
+                 kv_page_size: int = 0, kv_pages: Optional[int] = None,
+                 kv_dtype: str = "bf16", prefix_reuse: bool = True):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.max_batch = max_batch
         self.cache_len = cache_len
         self.mesh = mesh
+        # paged K/V cache (serve/kvcache.py): kv_page_size > 0 switches the
+        # slot caches to page accounting + prefix reuse. The page pool is
+        # host-managed and per-replica, so it is gated off the TP mesh path
+        # (the sharded cache layout is pinned by serve_specs).
+        if kv_page_size and mesh is not None:
+            raise ValueError("paged K/V cache (kv_page_size>0) does not "
+                             "compose with mesh= tensor parallelism")
+        self.kv_page_size = kv_page_size
+        self.kv_pages = kv_pages
+        self.kv_dtype = kv_dtype
+        self.prefix_reuse = prefix_reuse
+        self._kv = None
         # never split: per-request sample keys are fold_in derivations of
         # this base, so no shared RNG state advances across requests.
         self.rng = jax.random.PRNGKey(rng_seed)
@@ -307,6 +321,16 @@ class ServeEngine:
                               sp.replicated, sp.replicated),
                 out_shardings=(sp.replicated, sp.cache))
         self._sample = jax.jit(self._sample_batch_impl)
+
+        # suffix prefill for prefix-reuse admissions (dense family only —
+        # Model.prefill_continue is None elsewhere and hits never occur)
+        self._prefill_cont = None
+        if kv_page_size and self.model.prefill_continue is not None:
+            def _prefill_cont(p, c, s, b, st, n):
+                with exact_tp_scope(mesh):
+                    return self.model.prefill_continue(p, c, s, b, st, n,
+                                                       self._ctx)
+            self._prefill_cont = jax.jit(_prefill_cont)
 
     # ------------------------------------------------------------- sampling
 
@@ -406,15 +430,39 @@ class ServeEngine:
             f"request {r.rid}: prompt {plen} + max_new {r.max_new_tokens} "
             f"exceeds cache_len {self.cache_len}")
         vis = plen - len(r.prompt)
-        padded = self._bucket_len(len(r.prompt), self.cache_len - vis)
-        toks = np.zeros((1, padded), np.int32)
-        toks[0, : len(r.prompt)] = r.prompt      # right pad: masked by pos
-        batch = {"tokens": jnp.asarray(toks)}
-        if r.extra:
-            batch.update(r.extra)
+        # paged cache: open the block table (allocating pages for the
+        # prompt) and consult the prefix index. A hit restores the cached
+        # K/V pages into the slot row and prefills only the unseen suffix.
+        hit = None
+        if self._kv is not None:
+            hit = self._kv.admit(r.rid, np.asarray(r.prompt, np.int32),
+                                 plen, r.max_new_tokens)
         t_admit = time.perf_counter()
-        logits, cache = self._prefill_slot(
-            self.params, cache, np.int32(slot_idx), batch, np.int32(plen))
+        if hit is not None:
+            cache = self._kv.restore_prefix(cache, slot_idx, hit)
+            start = hit.tokens
+            suffix = np.asarray(r.prompt[start:], np.int32)
+            padded = self._bucket_len(len(suffix), self.cache_len - start)
+            toks = np.zeros((1, padded), np.int32)
+            toks[0, : len(suffix)] = suffix
+            logits, cache = self._prefill_cont(
+                self.params, cache, np.int32(slot_idx),
+                {"tokens": jnp.asarray(toks)}, np.int32(start),
+                np.int32(len(suffix)))
+        else:
+            padded = self._bucket_len(len(r.prompt), self.cache_len - vis)
+            toks = np.zeros((1, padded), np.int32)
+            toks[0, : len(r.prompt)] = r.prompt  # right pad: masked by pos
+            batch = {"tokens": jnp.asarray(toks)}
+            if r.extra:
+                batch.update(r.extra)
+            logits, cache = self._prefill_slot(
+                self.params, cache, np.int32(slot_idx), batch,
+                np.int32(plen))
+        if self._kv is not None and self._kv.prefix_reuse:
+            # publish this prompt's full pages for future admissions
+            cache = self._kv.insert_prefix(np.asarray(r.prompt, np.int32),
+                                           r.rid, cache, slot_idx)
         slot = _Slot(rid=r.rid, temperature=r.temperature,
                      remaining=r.max_new_tokens, n_gen=0, prompt_len=plen,
                      t_enqueue=t_enqueue, t_admit=t_admit, t_first=0.0)
@@ -444,6 +492,13 @@ class ServeEngine:
         self._per_req: Dict[int, RequestStats] = {}
         self._slots: List[Optional[_Slot]] = [None] * self.max_batch
         self._cache = self._fresh_cache()
+        if self.kv_page_size:
+            from repro.serve.kvcache import PagedKVCache
+            self._kv = PagedKVCache(
+                self.cfg, max_batch=self.max_batch,
+                cache_len=self.cache_len, page_size=self.kv_page_size,
+                n_pages=self.kv_pages, kv_dtype=self.kv_dtype,
+                prefix_reuse=self.prefix_reuse)
         self._cur = np.zeros((self.max_batch, 1), np.int32)
         self._n_steps = 0          # global batched decode steps
         self._n_prefills = 0
@@ -455,6 +510,13 @@ class ServeEngine:
     def idle(self) -> bool:
         """True when nothing is queued and every slot is free."""
         return not self._queue and all(s is None for s in self._slots)
+
+    @property
+    def kv(self):
+        """The run's PagedKVCache (None until reset() on a paged engine,
+        always None with kv_page_size=0). Chaos tests call its
+        check_conservation() through every evict/fence/recover path."""
+        return self._kv
 
     @property
     def queue_depth(self) -> int:
@@ -502,6 +564,8 @@ class ServeEngine:
             tok_per_s=s.n_gen / max(now - s.t_admit, 1e-9))
         self._slots[i] = None
         self._reqs.pop(s.rid, None)
+        if self._kv is not None:
+            self._kv.release(s.rid)     # terminal outcome: free pages once
         return s.rid
 
     def step(self) -> StepReport:
@@ -551,6 +615,11 @@ class ServeEngine:
             s.n_gen += 1
             s.remaining -= 1
             s.decode_steps += 1
+            if self._kv is not None:
+                # decode growth: allocate pages as the row crosses a
+                # page boundary (the written line is at pos-1; pos covers
+                # prompt_len + n_gen lines)
+                self._kv.grow(s.rid, s.prompt_len + s.n_gen)
             if s.remaining <= 0:
                 finished.append(self._finish(i))
         return StepReport(admitted=admitted, finished=finished,
@@ -586,6 +655,11 @@ class ServeEngine:
             wasted += len(self._out.pop(s.rid, []))
             self._t_enq.pop(s.rid, None)
             self._slots[i] = None
+            if self._kv is not None:
+                # slot eviction is this rid's terminal outcome here —
+                # release exactly once (queued evictions below never
+                # reached _admit, so they hold no pages)
+                self._kv.release(s.rid)
         keep: deque = deque()
         while self._queue:
             r = self._queue.popleft()
@@ -616,6 +690,10 @@ class ServeEngine:
                 {**d, "occupancy": engine_stats["occupancy"],
                  "tok_per_s": engine_stats["tok_per_s"]}
                 for d in per_dev]
+        if self._kv is not None:
+            # merged here (not in aggregate_engine_stats, whose schema is
+            # pinned by tests/test_serve_stats.py)
+            engine_stats["kvcache"] = self._kv.stats()
         self.last_stats = engine_stats
         return engine_stats
 

@@ -265,6 +265,22 @@ def router_slo_summary(ttft_ticks: List[int], tpot_ticks: List[float],
 
 # ------------------------------------------------------------------ router
 
+# paged K/V counters folded across engine incarnations (sums vs high-water
+# marks): recovery resets the engine, the replica's cache history must not
+_KV_SUM = ("prefix_lookups", "prefix_hits", "prefill_tokens_saved",
+           "pages_allocated", "pages_freed")
+_KV_MAX = ("peak_live_pages", "n_pages")
+
+
+def _fold_kv(acc: Dict[str, Any], kv: Optional[Dict[str, Any]]) -> None:
+    if not kv:
+        return
+    for k in _KV_SUM:
+        acc[k] = acc.get(k, 0) + kv.get(k, 0)
+    for k in _KV_MAX:
+        acc[k] = max(acc.get(k, 0), kv.get(k, 0))
+
+
 @dataclasses.dataclass
 class _Replica:
     idx: int
@@ -284,6 +300,7 @@ class _Replica:
     # engine resets on recovery, the replica's history must not
     hist_decode_steps: int = 0
     hist_prefills: int = 0
+    hist_kv: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def healthy_at(self, tick: int) -> bool:
         """Whether the replica PROCESS runs this tick (steps + beats) —
@@ -298,6 +315,14 @@ class _Replica:
 
     def total_prefills(self) -> int:
         return self.hist_prefills + self.engine.last_stats["prefills"]
+
+    def total_kv(self) -> Dict[str, Any]:
+        """Replica-lifetime paged-cache counters: history from retired
+        incarnations plus the current engine's run ({} when paging is
+        off)."""
+        acc = dict(self.hist_kv)
+        _fold_kv(acc, (self.engine.last_stats or {}).get("kvcache"))
+        return acc
 
 
 class Router:
@@ -344,7 +369,11 @@ class Router:
                  retry_budget: int = 2,
                  retry_backoff_base: int = 1,
                  retry_backoff_cap: int = 32,
-                 overload: Optional[OverloadConfig] = None):
+                 overload: Optional[OverloadConfig] = None,
+                 kv_page_size: int = 0,
+                 kv_pages: Optional[int] = None,
+                 kv_dtype: str = "bf16",
+                 prefix_reuse: bool = True):
         if replicas < 1:
             raise ValueError(f"need at least one replica, got {replicas}")
         if shed_policy not in ("reject-newest", "reject-oldest"):
@@ -365,13 +394,19 @@ class Router:
         self.retry_backoff_base = retry_backoff_base
         self.retry_backoff_cap = retry_backoff_cap
         self.overload = overload
+        self.kv_page_size = kv_page_size
         hb_dir = heartbeat_dir or tempfile.mkdtemp(prefix="repro-router-hb-")
         self.heartbeat_dir = hb_dir
         self.replicas: List[_Replica] = []
         for i in range(replicas):
+            # kv knobs pass straight through: each replica owns its OWN
+            # page pool and prefix index (replica-local reuse — a shared
+            # prompt prefills once per replica, not once per fleet)
             eng = ServeEngine(cfg, params, max_batch=max_batch,
                               cache_len=cache_len, rng_seed=rng_seed,
-                              mesh=mesh)
+                              mesh=mesh, kv_page_size=kv_page_size,
+                              kv_pages=kv_pages, kv_dtype=kv_dtype,
+                              prefix_reuse=prefix_reuse)
             rep = _Replica(
                 idx=i, engine=eng,
                 hb=HeartbeatFile(hb_dir, name=f"REPLICA_{i}"),
@@ -430,6 +465,7 @@ class Router:
         st = rep.engine.finalize()
         rep.hist_decode_steps += st["decode_steps"]
         rep.hist_prefills += st["prefills"]
+        _fold_kv(rep.hist_kv, st.get("kvcache"))
         rep.engine.reset()
         was_fenced = not rep.alive
         gap = tick - rep.fenced_at if (was_fenced and rep.fenced_at >= 0) \
@@ -462,6 +498,7 @@ class Router:
             rep.engine.reset()
             rep.hist_decode_steps = 0
             rep.hist_prefills = 0
+            rep.hist_kv = {}
         t_wall0 = time.perf_counter()
         ov = self.overload
 
@@ -780,6 +817,23 @@ class Router:
         }
         stats.update(router_slo_summary(ttft_ticks, tpot_ticks, ttft_s,
                                         tpot_s, queue_samples))
+        if self.kv_page_size:
+            # fleet view of the paged caches: hit rate over all replica-
+            # local indexes, page high-water occupancy, prefill work saved
+            acc: Dict[str, Any] = {}
+            for r in self.replicas:
+                _fold_kv(acc, r.total_kv() or None)
+            lookups = acc.get("prefix_lookups", 0)
+            stats["kvcache"] = {
+                **acc,
+                "prefix_hit_rate": (acc.get("prefix_hits", 0) / lookups
+                                    if lookups else 0.0),
+                "pages_live": (acc.get("pages_allocated", 0)
+                               - acc.get("pages_freed", 0)),
+                "page_occupancy": (acc.get("peak_live_pages", 0)
+                                   / acc.get("n_pages", 1)
+                                   if acc.get("n_pages") else 0.0),
+            }
         bt = trace.burst_ticks(tick_s, ticks)
         if bt:
             burst_toks = sum(toks_at_tick[k] for k in bt
@@ -803,6 +857,14 @@ class Router:
              "killed": r.killed,
              "fenced": not r.alive}
             for r in self.replicas]
+        if self.kv_page_size:
+            for row, r in zip(stats["per_replica"], self.replicas):
+                kv = r.total_kv()
+                lk = kv.get("prefix_lookups", 0)
+                row["prefix_hits"] = kv.get("prefix_hits", 0)
+                row["prefix_hit_rate"] = (row["prefix_hits"] / lk
+                                          if lk else 0.0)
+                row["peak_live_pages"] = kv.get("peak_live_pages", 0)
         return stats
 
 

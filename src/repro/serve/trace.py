@@ -86,6 +86,15 @@ class TraceConfig:
     deadline_sigma: float = 0.6
     deadline_min: int = 1
     deadline_max: int = 10_000
+    # Optional shared system prompts (paged K/V prefix reuse — serve/
+    # kvcache.py): with shared_prefix_frac > 0, a pool of `prefix_pool`
+    # fixed prefixes of length `prefix_len` is drawn up front, and each
+    # request prepends one pool member with probability shared_prefix_frac.
+    # All draws happen only when enabled (and AFTER the deadline draw), so
+    # pre-knob traces stay bit-identical per seed.
+    shared_prefix_frac: float = 0.0   # P(request carries a pool prefix)
+    prefix_pool: int = 4              # number of distinct shared prefixes
+    prefix_len: int = 16              # tokens per shared prefix
 
 
 @dataclasses.dataclass
@@ -147,7 +156,8 @@ def _lognormal_len(rng: np.random.Generator, median: int, sigma: float,
 def generate_trace(cfg: TraceConfig) -> Trace:
     """Derive the whole trace from one seeded generator (fixed draw order
     per request: gap, prompt length, prompt tokens, output length,
-    temperature) — per-seed determinism is part of the contract.
+    temperature, then the opt-in deadline and shared-prefix draws) —
+    per-seed determinism is part of the contract.
 
     Example::
 
@@ -161,6 +171,21 @@ def generate_trace(cfg: TraceConfig) -> Trace:
         raise ValueError(f"unknown arrival process {cfg.arrival!r} "
                          "(expected 'poisson' or 'bursty')")
     rng = np.random.default_rng(cfg.seed)
+    # shared system prompts (drawn up front, only when enabled): requests
+    # that pick the same pool member carry an identical token prefix, the
+    # workload shape the paged K/V prefix index exists for. The prefix is
+    # PREPENDED to the drawn prompt, so prompt lengths grow by prefix_len
+    # for participating requests (size cache_len accordingly).
+    # the prefix draws come from a DERIVED stream ([seed, 1]): turning the
+    # knob on prepends prefixes but leaves every arrival time, length,
+    # temperature, and deadline of the base trace bit-identical, so a
+    # shared-prompt bench row is an apples-to-apples cold-vs-warm compare.
+    prefixes = None
+    prng = None
+    if cfg.shared_prefix_frac > 0:
+        prng = np.random.default_rng([cfg.seed, 1])
+        prefixes = [prng.integers(0, cfg.vocab, cfg.prefix_len)
+                    .astype(np.int32) for _ in range(cfg.prefix_pool)]
     reqs: List[TracedRequest] = []
     t = 0.0
     for rid in range(cfg.n_requests):
@@ -183,6 +208,10 @@ def generate_trace(cfg: TraceConfig) -> Trace:
                            _lognormal_len(rng, cfg.deadline_median,
                                           cfg.deadline_sigma,
                                           cfg.deadline_max))
+        # shared-prefix draws use the derived stream, never the base one
+        if prefixes is not None and float(prng.random()) < cfg.shared_prefix_frac:
+            pid = int(prng.integers(cfg.prefix_pool))
+            prompt = np.concatenate([prefixes[pid], prompt])
         reqs.append(TracedRequest(
             t_arrival=t,
             request=Request(rid=rid, prompt=prompt, max_new_tokens=n_out,

@@ -1,0 +1,441 @@
+"""Paged K/V cache tier: pool accounting, prefix reuse, the bit-exactness
+contract, the int8 quantized route, and the paged_decode kernel family
+(docs/serving.md §Paged K/V cache).
+
+The load-bearing claims:
+
+  * bf16 paged serving is BIT-EXACT against the static-cache engine for
+    every model family — paging is a storage/sharing layer, never a
+    numerics change;
+  * page accounting conserves: pages_allocated == pages_freed + live on
+    every terminal path (finish, evict, router fence/recover), and the
+    FIFO free list makes identical runs allocate identical page ids;
+  * prefix reuse actually skips prefill (hits > 0, tokens saved) while
+    staying bit-exact at temperature 0;
+  * the int8 pool's error is bounded and pinned (per-page symmetric
+    scales), and the paged_decode kernel's int8 route stays within it;
+  * the auditor's KV001 rule catches a paged kernel whose VMEM model
+    forgets its gather buffers.
+"""
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduce_config
+from repro.kernels import api
+from repro.models.registry import build_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kvcache import (PagedKVCache, dequantize_page,
+                                 quantize_page)
+from repro.serve.router import Router
+from repro.serve.trace import TraceConfig, generate_trace
+
+VOCAB = 128
+
+# shared-system-prompt workload at temperature 0: the bit-exactness runs
+# compare token lists, so greedy sampling keeps the claim about caching,
+# not sampling luck
+PREFIX_TRACE = TraceConfig(
+    n_requests=12, rate_rps=16.0, prompt_median=6, prompt_sigma=0.6,
+    prompt_max=16, out_median=6, out_sigma=0.6, out_max=12,
+    temperatures=(0.0,), vocab=VOCAB, seed=3,
+    shared_prefix_frac=0.8, prefix_pool=2, prefix_len=16)
+
+
+def small_cfg(arch="qwen2-1.5b"):
+    return reduce_config(get_config(arch), layers=2, d_model=64, vocab=VOCAB)
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = small_cfg()
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# pool accounting
+# ---------------------------------------------------------------------------
+
+def test_alloc_free_conservation_and_fifo():
+    kv = PagedKVCache(small_cfg(), max_batch=2, cache_len=32, page_size=8,
+                      prefix_reuse=False)
+    p1 = np.arange(10, dtype=np.int32)
+    p2 = np.arange(20, dtype=np.int32)
+    kv.admit(0, p1, len(p1), 4)          # ceil(10/8) = 2 pages
+    kv.admit(1, p2, len(p2), 4)          # ceil(20/8) = 3 pages
+    assert kv.pages_live == 5
+    kv.check_conservation()
+    kv.release(0)
+    assert kv.pages_live == 3 and kv.pages_freed == 2
+    kv.check_conservation()
+    # FIFO determinism: freed pages go to the back; a fresh admit takes
+    # the oldest never-used ids first, so identical runs allocate
+    # identical pages
+    kv2 = PagedKVCache(small_cfg(), max_batch=2, cache_len=32, page_size=8,
+                       prefix_reuse=False)
+    kv2.admit(0, p1, len(p1), 4)
+    assert kv2._tables[0].pages() == [0, 1]
+    kv2.release(0)
+    kv2.admit(1, p2, len(p2), 4)
+    assert kv2._tables[1].pages() == [2, 3, 4]   # not the recycled 0/1
+
+
+def test_release_is_exactly_once_and_grow_allocates():
+    kv = PagedKVCache(small_cfg(), max_batch=2, cache_len=32, page_size=4,
+                      prefix_reuse=False)
+    p = np.arange(6, dtype=np.int32)
+    kv.admit(0, p, len(p), 8)            # 2 pages cover 6 tokens
+    assert kv.pages_live == 2
+    kv.grow(0, 8)                        # still inside page 2
+    assert kv.pages_live == 2
+    kv.grow(0, 9)                        # crosses into page 3
+    assert kv.pages_live == 3
+    kv.release(0)
+    kv.check_conservation()
+    with pytest.raises(AssertionError):  # double release must be loud
+        kv.release(0)
+
+
+def test_pool_exhaustion_raises():
+    kv = PagedKVCache(small_cfg(), max_batch=1, cache_len=16, page_size=4,
+                      n_pages=2, prefix_reuse=False)
+    kv.admit(0, np.arange(8, dtype=np.int32), 8, 1)
+    with pytest.raises(RuntimeError, match="page pool exhausted"):
+        kv.admit(1, np.arange(8, dtype=np.int32), 8, 1)
+
+
+def test_unpageable_families_fall_through():
+    for arch in ("rwkv6-7b", "hymba-1.5b"):
+        kv = PagedKVCache(small_cfg(arch), max_batch=2, cache_len=32,
+                          page_size=8)
+        assert not kv.pageable and not kv.prefix_reuse
+        kv.admit(0, np.arange(5, dtype=np.int32), 5, 4)
+        assert kv.pages_live == 0        # no pool held
+        kv.release(0)
+        kv.check_conservation()
+
+
+def test_int8_page_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 2, 16),
+                          jnp.bfloat16)
+    q, scale = quantize_page(x)
+    back = dequantize_page(q, scale)
+    # symmetric per-page quantization: half a quantization step
+    # (scale/2), plus one bf16 ulp at amax (2^-8 relative) for the
+    # rounding of the dequantized product back to the pool dtype
+    err = float(jnp.max(jnp.abs(x.astype(jnp.float32)
+                                - back.astype(jnp.float32))))
+    amax = float(scale) * 127.0
+    bound = 0.5 * float(scale) + amax * 2.0 ** -8
+    assert 0.0 < err <= bound + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# engine: bit-exactness + prefix reuse
+# ---------------------------------------------------------------------------
+
+def _family_requests(cfg, n=4):
+    extra = None
+    if cfg.family == "encdec":
+        extra = {"frames": jnp.zeros((1, cfg.enc_seq, cfg.d_model),
+                                     jnp.bfloat16)}
+    if cfg.family == "vlm":
+        extra = {"vis": jnp.zeros((1, cfg.n_vis_tokens, cfg.d_model),
+                                  jnp.bfloat16)}
+    return [Request(rid=i, prompt=np.arange(4 + 3 * i) % VOCAB,
+                    max_new_tokens=3 + 2 * (i % 2), extra=extra)
+            for i in range(n)]
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "deepseek-moe-16b",
+                                  "rwkv6-7b", "hymba-1.5b",
+                                  "whisper-small", "internvl2-26b"])
+def test_paged_bit_exact_vs_static_all_families(arch):
+    """The tentpole contract: default-dtype paged serving returns the
+    identical token lists the static-cache engine does, family by
+    family (unpageable families fall through to the unpaged path)."""
+    cfg = small_cfg(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    reqs = _family_requests(cfg)
+    base = ServeEngine(cfg, params, max_batch=2, cache_len=64).run(reqs)
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      kv_page_size=8)
+    out = eng.run(reqs)
+    assert out == base
+    eng.kv.check_conservation()
+    # every terminal request released its pages; only index-owned prefix
+    # pages (dense publishes the arange-prompt prefixes) may stay live
+    assert eng.kv.pages_live == eng.kv._index_pages
+
+
+def test_prefix_reuse_hits_and_stays_bit_exact(dense):
+    cfg, params = dense
+    reqs = generate_trace(PREFIX_TRACE).plain_requests()
+    base = ServeEngine(cfg, params, max_batch=4, cache_len=64).run(reqs)
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64,
+                      kv_page_size=8)
+    out = eng.run(reqs)
+    assert out == base                           # temperature-0 bit-exact
+    kv = eng.last_stats["kvcache"]
+    assert kv["prefix_hits"] > 0
+    assert kv["prefill_tokens_saved"] > 0
+    assert kv["prefix_hit_rate"] > 0.5           # shared-prompt workload
+    assert kv["bytes_per_slot_reduction"] > 0
+    eng.kv.check_conservation()
+
+
+def test_prefix_reuse_identical_prompts_share_pages(dense):
+    """Two identical prompts: the second admission must take refcounted
+    references on the first's index pages instead of allocating."""
+    cfg, params = dense
+    kv = PagedKVCache(cfg, max_batch=2, cache_len=32, page_size=4)
+    prompt = np.arange(9, dtype=np.int32)
+    hit = kv.admit(0, prompt, len(prompt), 2)
+    assert hit is None                           # cold
+    # simulate the engine publishing the prefix after prefill
+    shape = (cfg.n_layers, 2, 32, cfg.n_kv_heads, cfg.head_dim)
+    cache = {"k": jnp.zeros(shape, jnp.bfloat16),
+             "v": jnp.zeros(shape, jnp.bfloat16)}
+    kv.insert_prefix(prompt, 0, cache, 0)
+    live_before = kv.pages_live
+    hit2 = kv.admit(1, prompt, len(prompt), 2)
+    assert hit2 is not None and hit2.tokens == 8  # 2 pages, cap leaves 1
+    # only the 1-token tail needed a private page
+    assert kv.pages_live == live_before + 1
+    kv.release(0)
+    kv.release(1)
+    kv.check_conservation()
+
+
+def test_evict_inflight_releases_pages(dense):
+    cfg, params = dense
+    eng = ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                      kv_page_size=8, prefix_reuse=False)
+    eng.reset()
+    for i in range(4):
+        eng.submit(Request(rid=i, prompt=np.arange(10) % VOCAB,
+                           max_new_tokens=6))
+    eng.step()
+    assert eng.kv.pages_live > 0
+    evicted, _ = eng.evict_inflight()
+    assert evicted
+    eng.kv.check_conservation()
+    assert eng.kv.pages_live == 0                # queued ones never held
+
+
+def test_mesh_paging_rejected(dense):
+    cfg, params = dense
+    with pytest.raises(ValueError, match="tensor parallel"):
+        ServeEngine(cfg, params, max_batch=2, cache_len=64,
+                    kv_page_size=8, mesh=object())
+
+
+def test_int8_paged_engine_runs_and_accounts(dense):
+    cfg, params = dense
+    reqs = generate_trace(PREFIX_TRACE).plain_requests()
+    eng = ServeEngine(cfg, params, max_batch=4, cache_len=64,
+                      kv_page_size=8, kv_dtype="int8")
+    out = eng.run(reqs)
+    assert sorted(out) == sorted(r.rid for r in reqs)
+    for r in reqs:
+        assert len(out[r.rid]) == r.max_new_tokens
+    eng.kv.check_conservation()
+    assert eng.last_stats["kvcache"]["kv_dtype"] == "int8"
+
+
+# ---------------------------------------------------------------------------
+# router: replica-local prefix reuse (satellite)
+# ---------------------------------------------------------------------------
+
+def test_router_prefix_reuse_two_replicas_bit_exact(dense):
+    """Two replicas under the shared-prompt trace: each replica's LOCAL
+    index produces hits (the shared prompt prefills once per replica),
+    outputs stay bit-exact vs the cold single-engine baseline, and page
+    conservation holds on every replica."""
+    cfg, params = dense
+    trace = generate_trace(PREFIX_TRACE)
+    base = ServeEngine(cfg, params, max_batch=4, cache_len=64,
+                       rng_seed=0).run(trace.plain_requests())
+    rt = Router(cfg, params, replicas=2, max_batch=4, cache_len=64,
+                rng_seed=0, kv_page_size=8)
+    out, stats = rt.run(trace)
+    assert out == base
+    kv = stats["kvcache"]
+    assert kv["prefix_hits"] > 0 and kv["prefix_hit_rate"] > 0
+    for rep in rt.replicas:
+        rep.engine.kv.check_conservation()
+    per = {pr["replica"]: pr for pr in stats["per_replica"]}
+    assert sum(p["prefix_hits"] for p in per.values()) == kv["prefix_hits"]
+
+
+# ---------------------------------------------------------------------------
+# the paged_decode kernel family
+# ---------------------------------------------------------------------------
+
+def _example():
+    ks = api.get_kernel("paged_decode")
+    key = ks.canonical_keys()[0]
+    args, kwargs = ks.make_example(key, seed=7)
+    return ks, key, args, kwargs
+
+
+def test_paged_kernel_registered_with_versions():
+    ks = api.get_kernel("paged_decode")
+    assert ks.versions == ("ref", "gather", "int8")
+    assert ks.default_version == "gather"
+    assert set(ks.tunable) == {"gather", "int8"}
+    assert "paged_decode" in api.list_kernels()
+
+
+def test_paged_gather_matches_ref_all_configs():
+    from repro.kernels.paged.kernel_def import PagedBlockConfig
+    ks, key, args, _ = _example()
+    ref = api.dispatch("paged_decode", *args, version="ref")
+    for cfg in ks.config_space(key, "gather"):
+        got = api.dispatch("paged_decode", *args, version="gather",
+                           config=cfg)
+        np.testing.assert_allclose(
+            np.asarray(ref, np.float32), np.asarray(got, np.float32),
+            rtol=0, atol=8e-3, err_msg=str(cfg))
+    # a non-dividing pages_per_block clamps instead of dropping pages
+    got = api.dispatch("paged_decode", *args, version="gather",
+                       config=PagedBlockConfig("t", 3))
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(got, np.float32),
+                               rtol=0, atol=8e-3)
+
+
+def test_paged_int8_error_pinned():
+    """The quantized-cache route's accuracy delta, pinned: nonzero (it
+    is lossy) but within the per-page-scale bound at unit-variance
+    inputs. Bumping this bound is an API-contract change."""
+    _, _, args, _ = _example()
+    ref = api.dispatch("paged_decode", *args, version="ref")
+    i8 = api.dispatch("paged_decode", *args, version="int8")
+    err = float(np.max(np.abs(np.asarray(ref, np.float32)
+                              - np.asarray(i8, np.float32))))
+    assert 0.0 < err < 0.02
+
+
+def test_paged_int8_pool_form_matches_quantize_on_the_fly():
+    from repro.kernels.paged.paged import quantize_pool
+    _, _, (q, kp, vp, tbl, cl), _kw = _example()
+    auto = api.dispatch("paged_decode", q, kp, vp, tbl, cl,
+                        version="int8")
+    kq, kscale = quantize_pool(kp)
+    vq, vscale = quantize_pool(vp)
+    explicit = api.dispatch("paged_decode", q, kq, vq, tbl, cl,
+                            version="int8", kscale=kscale, vscale=vscale)
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(explicit))
+    with pytest.raises(ValueError, match="kscale/vscale"):
+        api.dispatch("paged_decode", q, kq, vq, tbl, cl, version="int8")
+
+
+def test_paged_kernel_audits_clean_and_models_vmem():
+    from repro.analyze.rules import audit_kernel
+    ks, key, _, _ = _example()
+    for version in ks.versions:
+        census, findings = audit_kernel(ks, version, key)
+        assert findings == [], (version, findings)
+        assert census.flops > 0
+    cfg = ks.static_config(key, "gather")
+    gb = ks.gather_buffer_bytes(cfg, key)
+    assert gb and ks.config_vmem_bytes(cfg, key) >= gb
+    assert ks.key_from_dims(key.key_dims()) == key
+
+
+def test_kv001_flags_uncovered_gather_buffers():
+    """A paged-style kernel that declares gather buffers but whose VMEM
+    model doesn't cover them must be caught by KV001 — that is the
+    rule's whole reason to exist."""
+    from repro.analyze.rules import audit_kernel
+
+    @dataclasses.dataclass(frozen=True)
+    class Key:
+        n: int = 64
+        name: str = "lazy"
+
+        def key_dims(self) -> str:
+            return str(self.n)
+
+    @dataclasses.dataclass(frozen=True)
+    class Cfg:
+        name: str = "lazy"
+        blk: int = 16
+
+    class LazyPaged(api.Kernel):
+        name = "lazypaged"
+        versions = ("v0",)
+        default_version = "v0"
+
+        def static_config(self, key, version) -> Cfg:
+            return Cfg()
+
+        def make_example(self, key, seed: int = 0) -> Tuple[tuple, dict]:
+            return (jnp.ones((key.n,), jnp.float32),), {}
+
+        def canonical_keys(self) -> List[Key]:
+            return [Key()]
+
+        def gather_buffer_bytes(self, config, key) -> int:
+            return 4 * config.blk * key.n
+
+        def config_vmem_bytes(self, config, key) -> Optional[int]:
+            return None                   # "forgot" the gather buffers
+
+        def run(self, x, *, version, config, interpret):
+            return x * 2.0
+
+    k = LazyPaged()
+    _, findings = audit_kernel(k, "v0", Key())
+    assert [f.rule for f in findings] == ["KV001"]
+    assert findings[0].severity == "error"
+    # covering the buffers clears the finding
+    k.config_vmem_bytes = lambda config, key: 4 * config.blk * key.n + 128
+    _, findings = audit_kernel(k, "v0", Key())
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# trace knobs (satellite)
+# ---------------------------------------------------------------------------
+
+def test_shared_prefix_knob_leaves_base_trace_intact():
+    base = generate_trace(dataclasses.replace(PREFIX_TRACE,
+                                              shared_prefix_frac=0.0))
+    on = generate_trace(PREFIX_TRACE)
+    assert [t.t_arrival for t in on.requests] \
+        == [t.t_arrival for t in base.requests]
+    assert [t.request.max_new_tokens for t in on.requests] \
+        == [t.request.max_new_tokens for t in base.requests]
+    prefixed = [i for i, (a, b) in enumerate(zip(on.requests,
+                                                 base.requests))
+                if len(a.request.prompt) != len(b.request.prompt)]
+    assert prefixed                              # the knob did something
+    for i in prefixed:
+        extra = len(on.requests[i].request.prompt) \
+            - len(base.requests[i].request.prompt)
+        assert extra == PREFIX_TRACE.prefix_len
+        np.testing.assert_array_equal(
+            on.requests[i].request.prompt[PREFIX_TRACE.prefix_len:],
+            base.requests[i].request.prompt)
+
+
+def test_shared_prefix_knob_deterministic_and_pooled():
+    a = generate_trace(PREFIX_TRACE)
+    b = generate_trace(PREFIX_TRACE)
+    for ta, tb in zip(a.requests, b.requests):
+        np.testing.assert_array_equal(ta.request.prompt, tb.request.prompt)
+    # prefixed prompts draw from at most prefix_pool distinct prefixes
+    heads = {tuple(t.request.prompt[:PREFIX_TRACE.prefix_len])
+             for t in a.requests
+             if len(t.request.prompt) > PREFIX_TRACE.prefix_len + 1}
+    assert 1 <= len(heads) <= PREFIX_TRACE.prefix_pool

@@ -153,3 +153,30 @@ def test_chaos_run_is_seed_deterministic(small, tmp_path):
               "p99_ttft_ticks", "p50_tpot_ticks", "p99_tpot_ticks",
               "max_queue_depth"):
         assert st_a[k] == st_b[k], k
+
+
+def test_paged_chaos_conserves_pages_and_stays_bit_exact(small, baseline,
+                                                         tmp_path):
+    """Chaos + paging: a replica flap (kill -> recover) while the engines
+    run paged K/V caches. The fence path releases every in-flight block
+    table through evict_inflight, recovery resets the pool, and the page
+    conservation invariant (allocated == freed + live) must hold on EVERY
+    replica afterwards — with outputs still bit-exact vs the undisturbed
+    unpaged baseline (paging is storage, never numerics)."""
+    cfg, params = small
+    trace, base_out = baseline
+    rt = Router(cfg, params, replicas=2, max_batch=2, cache_len=64,
+                rng_seed=0, heartbeat_dir=str(tmp_path),
+                stale_after_ticks=2, kv_page_size=8,
+                fault_plan=FaultPlan().flap(1, at_tick=3, down_ticks=4))
+    out, stats = rt.run(trace)
+    assert stats["completed"] == TRACE.n_requests
+    _assert_no_drop_no_dup(trace, out)
+    assert out == base_out                     # paged failover bit-exact
+    for rep in rt.replicas:
+        rep.engine.kv.check_conservation()
+        assert rep.engine.kv.pages_live == rep.engine.kv._index_pages
+    # the fleet kvcache stats fold history across the recovery reset
+    kv = stats["kvcache"]
+    assert kv["pages_allocated"] >= kv["pages_freed"]
+    assert kv["pages_allocated"] > 0

@@ -73,7 +73,9 @@ LOWER_BETTER = ("us_per_call", "step_s", "modeled_s", "cpu_ms", "compute_s",
                 "recovery_ticks", "brownout", "abs_err")
 HIGHER_BETTER = ("tflops", "pct_vpu_peak", "roofline", "speedup",
                  "goodput", "tok_per_tick", "hit_rate", "saved",
-                 "reduction", "bitexact", "agree_frac")
+                 "reduction", "bitexact", "agree_frac",
+                 "acceptance_rate", "accepted_tokens_per_step",
+                 "effective_tok_per_s")
 # wall-clock metrics are machine-dependent noise across CI hosts: excluded
 # from the gate unless --include-wallclock. The router's tick-denominated
 # SLO metrics (ttft_ticks/tpot_ticks/queue_depth/goodput_toks) are

@@ -46,6 +46,15 @@ Tables:
                          hit rate across router replicas. All token/page
                          counts are deterministic and gateable. Shortcut:
                          --kvcache (composable with --serve).
+  spec                 — speculative decoding rows (serve/spec.py): the
+                         acceptance rate and accepted-tokens-per-verify-
+                         step of a layer-sliced draft, spec-vs-plain
+                         bit-exactness at temperature 0, effective tok/s
+                         for both engines (wall clock) and the tuned
+                         multi-query paged_decode "verify" kernel pick.
+                         Acceptance/parity rows are deterministic and
+                         gateable. Shortcut: --spec (composable with
+                         --serve/--kvcache).
 """
 
 from __future__ import annotations
@@ -575,6 +584,98 @@ def kvcache():
          f"pages_freed={rkv['pages_freed']}")
 
 
+def spec():
+    """Speculative-decoding rows: one greedy trace served plain and with
+    a layer-sliced draft (the target's own first layer — the zero-train
+    draft that works because the residual stream is embedding-dominated).
+    Acceptance, accounting, and parity rows are deterministic per seed;
+    the tok/s rows are wall clock. The size is the smallest where the
+    verify's shared weight traffic beats per-step dispatch overhead, so
+    the speedup is a real effect, not noise."""
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.base import get_config, reduce_config
+    from repro.kernels import api
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeEngine
+    from repro.serve.trace import TraceConfig, generate_trace
+    from repro.tune import tuner
+
+    spec_k = 3
+    cfg = reduce_config(get_config("qwen2-1.5b"), layers=6, d_model=384,
+                        vocab=256)
+    params = build_model(cfg).init_params(jax.random.PRNGKey(0))
+    dcfg = dataclasses.replace(cfg, n_layers=1)
+    dparams = dict(params)
+    dparams["layers"] = jax.tree_util.tree_map(lambda x: x[:1],
+                                               params["layers"])
+    trace = generate_trace(TraceConfig(
+        n_requests=12, rate_rps=16.0, prompt_median=6, prompt_sigma=0.6,
+        prompt_max=16, out_median=8, out_sigma=0.5, out_max=12,
+        temperatures=(0.0,), vocab=256, seed=0))
+    reqs = trace.plain_requests()
+
+    plain = ServeEngine(cfg, params, max_batch=4, cache_len=64)
+    seng = ServeEngine(cfg, params, max_batch=4, cache_len=64,
+                       draft_cfg=dcfg, draft_params=dparams, spec_k=spec_k)
+    # first run jits; best-of-2 timed reps after
+    out_plain, out_spec = plain.run(list(reqs)), seng.run(list(reqs))
+    walls = {}
+    for name, eng in (("plain", plain), ("spec", seng)):
+        best = None
+        for _ in range(2):
+            t0 = time.perf_counter()
+            out = eng.run(list(reqs))
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        walls[name] = best
+    toks = sum(len(v) for v in out_plain.values())
+
+    sp = seng.last_stats["spec"]
+    _csv("spec_engine", walls["spec"] * 1e6,
+         f"k={sp['k']};acceptance_rate={sp['acceptance_rate']:.3f};"
+         f"accepted_tokens_per_step={sp['accepted_tokens_per_step']:.3f};"
+         f"tokens_emitted={sp['tokens_emitted']};"
+         f"verify_steps={sp['verify_steps']};"
+         f"draft_steps={sp['draft_steps']}")
+    exact = sum(np.array_equal(out_plain[r], out_spec[r]) for r in out_plain)
+    _csv("spec_parity", None,
+         f"bitexact_frac={exact / len(out_plain):.3f};"
+         f"requests={len(out_plain)};tokens={toks}")
+    # effective throughput: tokens per wall second, both routes — the
+    # tok_per_s fields are wall clock (gate-excluded); the speedup ratio
+    # is the headline the baseline artifact records
+    _csv("spec_throughput", None,
+         f"plain_tok_per_s={toks / walls['plain']:.1f};"
+         f"effective_tok_per_s={toks / walls['spec']:.1f};"
+         f"wall_speedup={walls['plain'] / walls['spec']:.3f}")
+
+    # the multi-query kernel route: tuned pages_per_block for the verify
+    # version at the qlen>1 canonical shape + its error vs the ref oracle
+    ks = api.get_kernel("paged_decode")
+    key = next(k for k in ks.canonical_keys() if k.qlen > 1)
+    (q, kp, vp, tbl, cl), _kw = ks.make_example(key)
+    tc = tuner.tune_kernel("paged_decode", key, version="verify",
+                           use_cache=False, measure_mode=False)
+    ref = api.dispatch("paged_decode", q, kp, vp, tbl, cl, version="ref")
+    ver = api.dispatch("paged_decode", q, kp, vp, tbl, cl,
+                       version="verify", config=tc.config)
+    errv = float(jnp.max(jnp.abs(ref.astype(jnp.float32)
+                                 - ver.astype(jnp.float32))))
+    _csv("spec_kernel", None,
+         f"qlen={key.qlen};pages_per_block={tc.config.pages_per_block};"
+         f"modeled_s={tc.modeled_s:.4g};verify_max_abs_err={errv:.4g};"
+         f"source={tc.source}",
+         kernel_config={"kernel": "paged_decode",
+                        "version": "verify",
+                        "config": dataclasses.asdict(tc.config),
+                        "source": tc.source})
+
+
 TABLES = {
     "gpp_journey": table1_gpp_journey,
     "roofline_terms": fig_roofline_terms,
@@ -587,6 +688,7 @@ TABLES = {
     "serve": serve,
     "router": router,
     "kvcache": kvcache,
+    "spec": spec,
 }
 
 # the cheap, deterministic-model subset CI benchmarks and the committed
@@ -616,6 +718,10 @@ def main() -> None:
                     help="add the kvcache table (paged K/V cache rows; "
                          "alone it runs just that table, with --serve it "
                          "rides along)")
+    ap.add_argument("--spec", action="store_true",
+                    help="add the spec table (speculative decoding rows; "
+                         "alone it runs just that table, composable with "
+                         "--serve/--kvcache)")
     ap.add_argument("--replicas", type=int, default=2, metavar="N",
                     help="with --router: number of replica engines "
                          "(default 2)")
@@ -628,7 +734,11 @@ def main() -> None:
     elif args.serve:
         todo = ["serve"]
     elif args.only is None:
-        todo = ["kvcache"] if args.kvcache else list(TABLES)
+        if args.kvcache or args.spec:
+            todo = (["kvcache"] if args.kvcache else []) \
+                + (["spec"] if args.spec else [])
+        else:
+            todo = list(TABLES)
     elif args.only == "fast":
         todo = list(FAST_TABLES)
     else:
@@ -667,6 +777,8 @@ def main() -> None:
         ROUTER_FAULT = args.fault       # beats a traceback mid-table
     if args.kvcache and "kvcache" not in todo:
         todo.append("kvcache")
+    if args.spec and "spec" not in todo:
+        todo.append("spec")
     print("name,us_per_call,derived")
     for name in todo:
         TABLES[name]()

@@ -13,9 +13,14 @@ same journey the other families got:
   * `PagedBlockConfig(pages_per_block)` — how many pages each online-
     softmax step gathers: bigger blocks amortize per-step overhead,
     smaller blocks shrink the gather buffer (the tuner's tradeoff);
-  * versions ("ref", "gather", "int8"): full-gather oracle, blockwise
-    bf16, blockwise int8 with per-page dequant scales (the quantized
-    route the serve pool's `kv_dtype="int8"` feeds);
+  * versions ("ref", "gather", "int8", "verify"): full-gather oracle,
+    blockwise bf16, blockwise int8 with per-page dequant scales (the
+    quantized route the serve pool's `kv_dtype="int8"` feeds), and the
+    decode-specialized multi-query verify route (q_len = k+1 ≪ S for
+    speculative decoding — the pool-dtype-adaptive loader serves float
+    and int8 pools alike). A rank-4 q (B, qlen, H, Hd) selects the
+    multi-query problem; every version handles both ranks so the
+    auditor's census covers the cross product;
   * `gather_buffer_bytes` — the auditor hook behind the KV001 rule: a
     paged kernel whose VMEM model forgets the gather buffers would pass
     VMEM001 while overflowing VMEM at runtime, so `config_vmem_bytes`
@@ -48,7 +53,8 @@ F32 = 4
 
 @dataclasses.dataclass(frozen=True)
 class PagedKey:
-    """ProblemKey for one paged decode layer: B rows of one token each
+    """ProblemKey for one paged decode layer: B rows of `qlen` query
+    tokens each (1 for plain decode, k+1 for the speculative verify)
     attending over npt pages of `page` K/V lines from the pool."""
     b: int
     h: int
@@ -56,11 +62,15 @@ class PagedKey:
     page: int
     npt: int
     hd: int
+    qlen: int = 1
     name: str = "paged_decode"
 
     def key_dims(self) -> str:
-        return (f"{self.b}x{self.h}x{self.kvh}x{self.page}"
+        base = (f"{self.b}x{self.h}x{self.kvh}x{self.page}"
                 f"x{self.npt}x{self.hd}")
+        # qlen==1 keeps the historical 6-part form so existing tune-cache
+        # entries keep resolving; multi-query keys append a 7th part
+        return base if self.qlen == 1 else f"{base}x{self.qlen}"
 
 
 def _div_clamp(blk: int, n: int) -> int:
@@ -91,16 +101,20 @@ def _gather_bytes(cfg: PagedBlockConfig, key: PagedKey,
 
 class PagedDecodeKernel(api.Kernel):
     name = "paged_decode"
-    versions = ("ref", "gather", "int8")
+    versions = ("ref", "gather", "int8", "verify")
     default_version = "gather"
-    tunable = ("gather", "int8")
+    tunable = ("gather", "int8", "verify")
 
     def problem_key(self, q, kpool, vpool, block_table, cache_len,
                     **kwargs) -> PagedKey:
-        b, h, hd = q.shape
+        if q.ndim == 4:
+            b, qlen, h, hd = q.shape
+        else:
+            b, h, hd = q.shape
+            qlen = 1
         _, page, kvh, _ = kpool.shape
         return PagedKey(b=b, h=h, kvh=kvh, page=page,
-                        npt=block_table.shape[1], hd=hd)
+                        npt=block_table.shape[1], hd=hd, qlen=qlen)
 
     def config_space(self, key: PagedKey, version: str
                      ) -> List[PagedBlockConfig]:
@@ -136,17 +150,22 @@ class PagedDecodeKernel(api.Kernel):
         cfg = config.clamped(key)
         ctx = key.npt * key.page                     # gathered context lines
         kv_item = 1 if version == "int8" else BF16
-        flops = 4.0 * key.b * key.h * ctx * key.hd   # qk^T + pv, 2 each
+        # qk^T + pv, 2 flops each, per query token (qlen > 1: the verify
+        # route re-uses each gathered block for all qlen queries, so the
+        # K/V traffic term below does NOT scale with qlen — that is the
+        # whole point of batching the verify into one pass)
+        flops = 4.0 * key.b * key.qlen * key.h * ctx * key.hd
         mxu_s = flops / TPU_V5E.mxu_flops
-        vpu_s = key.b * key.h * ctx * SOFTMAX_PASSES / PASS_RATE
+        vpu_s = key.b * key.qlen * key.h * ctx * SOFTMAX_PASSES / PASS_RATE
         n_blocks = key.npt // cfg.pages_per_block
         overhead_s = n_blocks * SCAN_OVERHEAD_S
         bytes_ = (2 * key.b * ctx * key.kvh * key.hd * kv_item   # k + v
-                  + 2 * key.b * key.h * key.hd * BF16)           # q, out
+                  + 2 * key.b * key.qlen * key.h * key.hd * BF16)  # q, out
         return max(mxu_s + vpu_s + overhead_s, bytes_ / TPU_V5E.hbm_bw)
 
     def measure_ok(self, key: PagedKey) -> bool:
-        return key.b * key.h * key.npt * key.page * key.hd <= 1 << 20
+        return (key.b * key.qlen * key.h * key.npt * key.page * key.hd
+                <= 1 << 20)
 
     def make_example(self, key: PagedKey, seed: int = 0
                      ) -> Tuple[tuple, dict]:
@@ -155,7 +174,9 @@ class PagedDecodeKernel(api.Kernel):
         # gathers, so the MODEL001 drift check compares like with like
         ks = jax.random.split(jax.random.PRNGKey(seed), 3)
         n_pages = key.b * key.npt
-        q = jax.random.normal(ks[0], (key.b, key.h, key.hd), jnp.bfloat16)
+        qshape = ((key.b, key.h, key.hd) if key.qlen == 1
+                  else (key.b, key.qlen, key.h, key.hd))
+        q = jax.random.normal(ks[0], qshape, jnp.bfloat16)
         kpool = jax.random.normal(
             ks[1], (n_pages, key.page, key.kvh, key.hd), jnp.bfloat16)
         vpool = jax.random.normal(
@@ -164,6 +185,9 @@ class PagedDecodeKernel(api.Kernel):
         ctx = key.npt * key.page
         cache_len = (ctx - (jnp.arange(key.b, dtype=jnp.int32)
                             % max(ctx - 1, 1)))
+        # every query position must exist: cache_len counts the qlen
+        # candidate lines already written to the pool
+        cache_len = jnp.maximum(cache_len, key.qlen)
         return (q, kpool, vpool, table, cache_len), {}
 
     def config_from_json(self, d: Dict) -> PagedBlockConfig:
@@ -171,18 +195,23 @@ class PagedDecodeKernel(api.Kernel):
 
     # -- static-analysis hooks (repro.analyze) -----------------------------
     def canonical_keys(self) -> List[PagedKey]:
-        return [PagedKey(b=2, h=2, kvh=2, page=16, npt=4, hd=32)]
+        return [PagedKey(b=2, h=2, kvh=2, page=16, npt=4, hd=32),
+                PagedKey(b=2, h=2, kvh=2, page=16, npt=4, hd=32, qlen=4)]
 
     def key_from_dims(self, dims: str) -> PagedKey:
-        b, h, kvh, page, npt, hd = (int(d) for d in dims.split("x"))
-        return PagedKey(b=b, h=h, kvh=kvh, page=page, npt=npt, hd=hd)
+        parts = [int(d) for d in dims.split("x")]
+        b, h, kvh, page, npt, hd = parts[:6]
+        qlen = parts[6] if len(parts) > 6 else 1
+        return PagedKey(b=b, h=h, kvh=kvh, page=page, npt=npt, hd=hd,
+                        qlen=qlen)
 
     def config_vmem_bytes(self, config: PagedBlockConfig, key: PagedKey
                           ) -> int:
         span = config.pages_per_block * key.page
-        resident = (key.b * key.h * key.hd * F32 * 2      # q (f32), acc
-                    + 2 * key.b * key.h * F32             # l, m stats
-                    + key.b * key.h * span * F32)         # score block
+        qn = key.qlen
+        resident = (key.b * qn * key.h * key.hd * F32 * 2  # q (f32), acc
+                    + 2 * key.b * qn * key.h * F32         # l, m stats
+                    + key.b * qn * key.h * span * F32)     # score block
         return self.gather_buffer_bytes(config, key) + resident
 
     def gather_buffer_bytes(self, config: PagedBlockConfig, key: PagedKey
@@ -204,18 +233,37 @@ class PagedDecodeKernel(api.Kernel):
     def run(self, q, kpool, vpool, block_table, cache_len, *, version: str,
             config: Optional[PagedBlockConfig], interpret: Optional[bool],
             kscale=None, vscale=None):
-        """q: (B,H,Hd); pools: (P,page,KvH,Hd); block_table: (B,npt) int32;
-        cache_len: (B,) -> (B,H,Hd). All versions are pure JAX (`interpret`
-        accepted for protocol symmetry, nothing to toggle). The int8
-        version takes per-page `kscale`/`vscale` (serve pool layout); given
-        a float pool it quantizes on the fly — the self-contained form the
-        auditor traces and tests compare against."""
+        """q: (B,H,Hd) single-token decode or (B,Q,H,Hd) multi-query
+        verify; pools: (P,page,KvH,Hd); block_table: (B,npt) int32;
+        cache_len: (B,) -> out matching q's rank. All versions are pure
+        JAX (`interpret` accepted for protocol symmetry, nothing to
+        toggle) and all handle both q ranks — the census traces every
+        (canonical key, version) pair, including the qlen=4 key. The int8
+        version takes per-page `kscale`/`vscale` (serve pool layout);
+        given a float pool it quantizes on the fly — the self-contained
+        form the auditor traces and tests compare against."""
         if version == "ref":
             return paged_lib.paged_decode_ref(q, kpool, vpool, block_table,
                                               cache_len)
         key = self.problem_key(q, kpool, vpool, block_table, cache_len)
         cfg = (config or PagedBlockConfig()).clamped(key)
+        if version == "verify":
+            if not jnp.issubdtype(kpool.dtype, jnp.floating) \
+                    and (kscale is None or vscale is None):
+                raise ValueError("paged_decode verify needs kscale/vscale "
+                                 "for an int8 pool")
+            return paged_lib.paged_decode_verify(
+                q, kpool, vpool, block_table, cache_len,
+                pages_per_block=cfg.pages_per_block, kscale=kscale,
+                vscale=vscale)
         if version == "gather":
+            if q.ndim == 4:
+                # the single-token gather loop has no query axis; route
+                # multi-query problems through the verify scan (same
+                # blockwise loader, per-query causal mask)
+                return paged_lib.paged_decode_verify(
+                    q, kpool, vpool, block_table, cache_len,
+                    pages_per_block=cfg.pages_per_block)
             return paged_lib.paged_decode_gather(
                 q, kpool, vpool, block_table, cache_len,
                 pages_per_block=cfg.pages_per_block)
@@ -225,6 +273,11 @@ class PagedDecodeKernel(api.Kernel):
         elif kscale is None or vscale is None:
             raise ValueError("paged_decode int8 needs kscale/vscale for an "
                              "int8 pool")
+        if q.ndim == 4:
+            return paged_lib.paged_decode_verify(
+                q, kpool, vpool, block_table, cache_len,
+                pages_per_block=cfg.pages_per_block, kscale=kscale,
+                vscale=vscale)
         return paged_lib.paged_decode_int8(
             q, kpool, vpool, block_table, cache_len, kscale, vscale,
             pages_per_block=cfg.pages_per_block)

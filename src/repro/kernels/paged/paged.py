@@ -6,7 +6,10 @@ its block table names. Decode attention over that layout must GATHER
 before it can contract — these implementations are the kernel side of
 that contract, one layer at a time:
 
-  q            (B, H, Hd)            one decode token per row
+  q            (B, H, Hd)            one decode token per row, OR
+               (B, Q, H, Hd)         Q = k+1 verify queries per row
+                                     (speculative decoding; query j sits
+                                     at position cache_len - Q + j)
   kpool/vpool  (P, page, KvH, Hd)    the page pool (bf16; int8 + scales
                                      for the quantized route)
   block_table  (B, npt) int32        page ids per row, in context order
@@ -14,11 +17,11 @@ that contract, one layer at a time:
                                      be any in-range id — masking wins)
   cache_len    (B,) int32            valid context tokens per row
 
-Three versions, reference -> fastest (kernel_def.py registers them):
+Four versions, reference -> fastest (kernel_def.py registers them):
 
   * `paged_decode_ref`    — gather the WHOLE table, then run the exact
-    `models.attention.decode_attention` math: the oracle the blockwise
-    versions are tested against.
+    `models.attention` math (rank-polymorphic over q): the oracle the
+    blockwise versions are tested against.
   * `paged_decode_gather` — lax.scan over blocks of `pages_per_block`
     pages with an online-softmax accumulator (m, l, acc in f32): only
     one gathered block is live at a time, so the VMEM working set is
@@ -26,6 +29,11 @@ Three versions, reference -> fastest (kernel_def.py registers them):
   * `paged_decode_int8`   — the gather loop over an int8 pool: each
     gathered page dequantizes with its per-page scale
     (serve.kvcache.quantize_page granule) before the contraction.
+  * `paged_decode_verify` — the decode-specialized multi-query route for
+    speculative decoding: q_len = k+1 queries share every gathered block
+    (one context fetch verifies all candidates), with a per-query causal
+    mask; the loader adapts to the pool dtype so one version covers the
+    bf16 and int8 cache routes.
 """
 
 from __future__ import annotations
@@ -35,7 +43,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.attention import NEG_INF, decode_attention
+from repro.models.attention import (NEG_INF, decode_attention,
+                                    decode_attention_multi)
 from repro.models.layers import PARAM_DTYPE
 
 INT8_MAX = 127.0
@@ -62,9 +71,14 @@ def quantize_pool(pool: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 def paged_decode_ref(q, kpool, vpool, block_table, cache_len) -> jax.Array:
     """Full-gather oracle: materialize the context, defer to the serving
-    path's own decode_attention (identical masking and accumulation)."""
+    path's own decode attention (identical masking and accumulation).
+    q rank selects the math: (B,H,Hd) single-token decode, (B,Q,H,Hd)
+    multi-query verify (speculative decoding — query j sits at absolute
+    position cache_len - Q + j with a per-query causal mask)."""
     k = gather_pages(kpool, block_table)
     v = gather_pages(vpool, block_table)
+    if q.ndim == 4:
+        return decode_attention_multi(q, k, v, cache_len)
     return decode_attention(q[:, None], k, v, cache_len)[:, 0]
 
 
@@ -119,6 +133,90 @@ def paged_decode_gather(q, kpool, vpool, block_table, cache_len, *,
     return _online_block_scan(q, block_table, cache_len, load_block,
                               pages_per_block=pages_per_block, page=page,
                               kvh=kvh)
+
+
+def _online_block_scan_multi(q, block_table, cache_len, load_block, *,
+                             pages_per_block: int, page: int, kvh: int):
+    """Multi-query twin of _online_block_scan for the verify route
+    (speculative decoding): q (B,Q,H,Hd), the Q candidate tokens' rows
+    are already in the pool and counted by cache_len, so query j sits at
+    absolute position cache_len - Q + j and its per-query causal mask is
+    pos <= q_pos — the online-softmax state just grows a Q axis."""
+    b, qn, h, hd = q.shape
+    npt = block_table.shape[1]
+    n_blocks = npt // pages_per_block
+    span = pages_per_block * page
+    g = h // kvh
+    scale = hd ** -0.5
+    qr = q.reshape(b, qn, kvh, g, hd).transpose(0, 2, 3, 1, 4)
+    qr = qr.astype(jnp.float32)                              # (B,KvH,G,Q,Hd)
+    q_pos = cache_len[:, None] - qn + jnp.arange(qn)[None, :]      # (B,Q)
+
+    def body(carry, bi):
+        m, l, acc = carry
+        ids = jax.lax.dynamic_slice_in_dim(
+            block_table, bi * pages_per_block, pages_per_block, axis=1)
+        kb, vb = load_block(ids)
+        pos = bi * span + jnp.arange(span)
+        valid = pos[None, None, :] <= q_pos[:, :, None]      # (B,Q,span)
+        s = jnp.einsum("bkgqd,bskd->bkgqs", qr, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))          # (B,KvH,G,Q)
+        e = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(e, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", e, vb, preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((b, kvh, g, qn), NEG_INF, jnp.float32),
+            jnp.zeros((b, kvh, g, qn), jnp.float32),
+            jnp.zeros((b, kvh, g, qn, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_blocks))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, qn, h, hd)
+    return out.astype(PARAM_DTYPE)
+
+
+def paged_decode_verify(q, kpool, vpool, block_table, cache_len, *,
+                        pages_per_block: int, kscale=None,
+                        vscale=None) -> jax.Array:
+    """The decode-specialized verify route: q_len = k+1 ≪ S queries per
+    row against the page pool, blockwise with online softmax. The loader
+    adapts to the pool dtype — float pools load as-is, int8 pools
+    dequantize per page with their scales (the serve pool's quantized
+    layout) — so one version serves both cache routes. A rank-3 q is the
+    q_len=1 degenerate case (identical math to paged_decode_gather)."""
+    _, page, kvh, hd = kpool.shape
+    if jnp.issubdtype(kpool.dtype, jnp.floating):
+        def load_block(ids):
+            return (gather_pages(kpool, ids).astype(jnp.float32),
+                    gather_pages(vpool, ids).astype(jnp.float32))
+    else:
+        if kscale is None or vscale is None:
+            raise ValueError("paged_decode verify needs kscale/vscale for "
+                             "an int8 pool")
+
+        def load_block(ids):
+            b, ppb = ids.shape
+
+            def deq(pool, scales):
+                blk = jnp.take(pool, ids.reshape(-1), axis=0)
+                s = jnp.take(scales, ids.reshape(-1), axis=0)
+                f = blk.astype(jnp.float32) * s[:, None, None, None]
+                return f.reshape(b, ppb * page, kvh, hd)
+
+            return deq(kpool, kscale), deq(vpool, vscale)
+
+    if q.ndim == 3:
+        out = _online_block_scan_multi(
+            q[:, None], block_table, cache_len, load_block,
+            pages_per_block=pages_per_block, page=page, kvh=kvh)
+        return out[:, 0]
+    return _online_block_scan_multi(q, block_table, cache_len, load_block,
+                                    pages_per_block=pages_per_block,
+                                    page=page, kvh=kvh)
 
 
 def paged_decode_int8(q, kpool, vpool, block_table, cache_len,

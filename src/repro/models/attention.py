@@ -124,6 +124,39 @@ def decode_attention(q, k_cache, v_cache, cache_len, *,
     return out.reshape(b, 1, h, hd).astype(PARAM_DTYPE)
 
 
+def decode_attention_multi(q, k_cache, v_cache, cache_len, *,
+                           window: int = 0) -> jax.Array:
+    """Multi-query decode: Q=k+1 candidate tokens per row attend against a
+    cache whose last Q lines are the candidates themselves (speculative
+    verify — serve/spec.py). q: (B,Q,H,Hd); caches: (B,L,KvH,Hd).
+
+    cache_len counts valid positions INCLUDING the Q candidate lines, so
+    candidate j (0-based) sits at absolute position cache_len - Q + j and
+    may attend every cache position <= its own — the per-query causal mask
+    that makes verify logits bit-identical to Q sequential decode_attention
+    calls at the same positions. cache_len: scalar or (B,) per-row."""
+    b, qn, h, hd = q.shape
+    _, l, n_kv, _ = k_cache.shape
+    g = h // n_kv
+    scale = hd ** -0.5
+    qr = q.reshape(b, qn, n_kv, g, hd).transpose(0, 2, 3, 1, 4)
+    scores = jnp.einsum("bkgqd,bskd->bkgqs", qr, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(l)
+    clen = cache_len if jnp.ndim(cache_len) == 1 else \
+        jnp.full((b,), cache_len, jnp.int32)
+    q_pos = clen[:, None] - qn + jnp.arange(qn)[None, :]     # (B,Q) absolute
+    mask = pos[None, None, :] <= q_pos[:, :, None]           # (B,Q,L)
+    if window:
+        mask &= pos[None, None, :] > (q_pos[:, :, None] - window)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(PARAM_DTYPE)
+    out = jnp.einsum("bkgqs,bskd->bkgqd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, qn, h, hd)
+    return out.astype(PARAM_DTYPE)
+
+
 # ---------------------------------------------------------------------------
 # distributed flash-decode: seq-sharded KV cache + logsumexp-combine psum
 # ---------------------------------------------------------------------------

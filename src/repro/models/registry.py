@@ -46,6 +46,11 @@ class Model:
     # prefill is not suffix-separable (recurrent state, vis/enc prefixes,
     # token-count-sensitive MoE capacity).
     prefill_continue: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
+    # multi-position decode: verify Q=k+1 candidate tokens per row in ONE
+    # forward (speculative decoding — serve/spec.py). None for families
+    # whose step is not position-batchable (recurrent state folds tokens
+    # sequentially; moe capacity is token-count sensitive).
+    decode_verify: Optional[Callable[..., Tuple[jax.Array, PyTree]]] = None
 
 
 # ===========================================================================
@@ -681,6 +686,41 @@ def build_model(cfg: ModelConfig) -> Model:
             raise ValueError(cfg.family)
         return _logits(params, x), cache
 
+    # ---- speculative verify (multi-position decode) --------------------------
+
+    def decode_verify(params, cache, tokens, ctx: Optional[DistCtx] = None):
+        """tokens: (B, Q) — per row, the last committed token followed by
+        Q-1 draft candidates. Returns (logits (B,Q,V) f32, new cache):
+        logits[:, j] is the target distribution AFTER consuming tokens[:, j],
+        exactly what Q sequential decode_step calls would have produced.
+
+        cache["pos"] must be the (B,) per-row slot-scheduler layout; row
+        writes land at pos..pos+Q-1 and pos advances by Q (the speculated
+        tip). The caller rolls pos back to the last ACCEPTED line after the
+        accept decision — see serve/spec.py for the contract."""
+        assert cfg.family == "dense", (
+            "decode_verify is only defined for pure-attention decoder "
+            f"stacks (position-batchable step): {cfg.family}")
+        x = embed(tokens, params["embed"])
+        pos = cache["pos"]
+
+        def body(carry, inp):
+            x = carry
+            lp, ck, cv = inp
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            a, (ck, cv) = T.attn_block_decode_k(lp["attn"], h, cfg,
+                                                cache_k=ck, cache_v=cv,
+                                                pos=pos)
+            x = x + a
+            h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+            f = swiglu(h, lp["ffn"]["wi"], lp["ffn"]["wg"], lp["ffn"]["wo"])
+            return x + f, (ck, cv)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs, "pos": pos + tokens.shape[1]}
+        return _logits(params, x), new_cache
+
     # ---- slot refill (continuous batching) -----------------------------------
 
     def prefill_into_slot(params, cache, slot, batch, prompt_len,
@@ -776,4 +816,5 @@ def build_model(cfg: ModelConfig) -> Model:
         cache_axes=functools.partial(cache_logical_axes, cfg),
         prefill_continue=(prefill_continue if cfg.family == "dense"
                           else None),
+        decode_verify=(decode_verify if cfg.family == "dense" else None),
     )

@@ -318,6 +318,37 @@ def attn_block_decode(lp, x, cfg: ModelConfig, *, cache_k, cache_v, pos,
     return out, (cache_k, cache_v)
 
 
+def attn_block_decode_k(lp, x, cfg: ModelConfig, *, cache_k, cache_v, pos,
+                        window=0, rope=True):
+    """Q-token verify attention against a cache (speculative decoding —
+    serve/spec.py). x: (B,Q,D) holds the Q=k+1 candidate tokens per row;
+    pos: (B,) per-row write offset of the FIRST candidate (identical to the
+    plain decode write position, so a spec round that accepts zero drafts
+    writes the same line plain decode would have).
+
+    All Q K/V lines land at pos..pos+Q-1 via Q one-hot selects (a static
+    python loop — Q is small), then one multi-query causal attention where
+    candidate j sees cache positions <= pos+j. Rejected candidates' lines
+    stay in the buffer beyond the rolled-back position; they are invisible
+    (cache_len masking) and are overwritten in the step that first reaches
+    them (write-at-pos precedes the mask that includes pos)."""
+    b_, qn, _ = x.shape
+    q, k, v = _qkv(lp, x, cfg)
+    pvec = pos[:, None] + jnp.arange(qn)[None, :]          # (B,Q) absolute
+    if rope and cfg.rope_theta:
+        q = apply_rope(q.swapaxes(1, 2), pvec[:, None], cfg.rope_theta).swapaxes(1, 2)
+        k = apply_rope(k.swapaxes(1, 2), pvec[:, None], cfg.rope_theta).swapaxes(1, 2)
+    lcache = cache_k.shape[1]
+    for j in range(qn):
+        oh = jnp.arange(lcache)[None, :] == (pos + j)[:, None]    # (B, L)
+        cache_k = jnp.where(oh[:, :, None, None], k[:, j:j + 1], cache_k)
+        cache_v = jnp.where(oh[:, :, None, None], v[:, j:j + 1], cache_v)
+    out = attn_lib.decode_attention_multi(q, cache_k, cache_v, pos + qn,
+                                          window=window)
+    out = matmul_rp(out.reshape(b_, qn, -1), lp["wo"])
+    return out, (cache_k, cache_v)
+
+
 def attn_block_continue(lp, x, cfg: ModelConfig, *, cache_k, cache_v, slot,
                         start, positions, ctx=None):
     """Suffix attention for prefix-continue prefill (paged K/V cache with

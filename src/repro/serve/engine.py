@@ -231,7 +231,9 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  cache_len: int = 512, rng_seed: int = 0, mesh=None,
                  kv_page_size: int = 0, kv_pages: Optional[int] = None,
-                 kv_dtype: str = "bf16", prefix_reuse: bool = True):
+                 kv_dtype: str = "bf16", prefix_reuse: bool = True,
+                 draft_cfg: Optional[ModelConfig] = None, draft_params=None,
+                 spec_k: int = 0):
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.max_batch = max_batch
@@ -249,6 +251,34 @@ class ServeEngine:
         self.kv_dtype = kv_dtype
         self.prefix_reuse = prefix_reuse
         self._kv = None
+        # speculative decoding (serve/spec.py): spec_k > 0 pairs the target
+        # with a small draft model that proposes spec_k candidates per
+        # active slot each round, verified by ONE (spec_k+1)-position
+        # target forward (Model.decode_verify). The accept loop and the
+        # per-row position rollback are host-managed like the page pool,
+        # so spec is gated off the TP mesh path too.
+        self.spec_k = spec_k
+        self.draft_cfg = draft_cfg
+        self.draft_params = draft_params
+        self.draft_model: Optional[Model] = None
+        self._draft_cache = None
+        self._spec_inflight: Dict[int, int] = {}
+        self._spec: Optional[Dict[str, int]] = None
+        if spec_k:
+            if mesh is not None:
+                raise ValueError("speculative decoding (spec_k>0) does not "
+                                 "compose with mesh= tensor parallelism")
+            if draft_cfg is None or draft_params is None:
+                raise ValueError("spec_k>0 requires draft_cfg= and "
+                                 "draft_params=")
+            if draft_cfg.family != "dense":
+                raise ValueError("draft model must be a dense decoder "
+                                 f"(per-row K/V rollback): {draft_cfg.family!r}")
+            if draft_cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    "draft/target vocab mismatch: "
+                    f"{draft_cfg.vocab_size} vs {cfg.vocab_size}")
+            self.draft_model = build_model(draft_cfg)
         # never split: per-request sample keys are fold_in derivations of
         # this base, so no shared RNG state advances across requests.
         self.rng = jax.random.PRNGKey(rng_seed)
@@ -332,6 +362,33 @@ class ServeEngine:
                                                        self._ctx)
             self._prefill_cont = jax.jit(_prefill_cont)
 
+        if spec_k:
+            if self.model.decode_verify is None:
+                raise ValueError(
+                    "target family has no multi-position decode_verify "
+                    f"entry (spec_k>0 needs one): {cfg.family!r}")
+
+            def _draft_decode(p, c, t, active):
+                logits, new = self.draft_model.decode_step(p, c, t, None)
+                new["pos"] = jnp.where(active, new["pos"], c["pos"])
+                return logits, new
+
+            def _draft_prefill(p, c, s, b, n):
+                return self.draft_model.prefill_into_slot(p, c, s, b, n,
+                                                          None)
+
+            def _verify_masked(p, c, t, active):
+                # the (spec_k+1)-position verify forward; done-row masking
+                # holds finished slots' pos exactly like _decode_masked
+                logits, new = self.model.decode_verify(p, c, t, self._ctx)
+                new["pos"] = jnp.where(active, new["pos"], c["pos"])
+                return logits, new
+
+            self._draft_decode = jax.jit(_draft_decode)
+            self._draft_prefill = jax.jit(_draft_prefill)
+            self._verify = jax.jit(_verify_masked)
+            self._spec_sample = jax.jit(self._spec_sample_impl)
+
     # ------------------------------------------------------------- sampling
 
     @staticmethod
@@ -347,6 +404,27 @@ class ServeEngine:
 
         def draw(rid, ngen, row, temp):
             key = jax.random.fold_in(jax.random.fold_in(base_key, rid), ngen)
+            return jax.random.categorical(key, row / jnp.maximum(temp, 1e-6))
+
+        sampled = jax.vmap(draw)(rids, ngens, lg, temps).astype(jnp.int32)
+        return jnp.where(temps > 0, sampled, greedy)
+
+    @staticmethod
+    def _spec_sample_impl(logits: jax.Array, temps: jax.Array,
+                          base_key: jax.Array, rids: jax.Array,
+                          ngens: jax.Array, salt: jax.Array) -> jax.Array:
+        """Draft-proposal sampler for spec rounds. Greedy rows take the
+        draft argmax; temperature rows draw from the DRAFT distribution
+        with the salted per-request key (serve/spec.py key schedule), so
+        spec-round draws can never collide with the plain path's un-salted
+        sample stream or with the accept/residual/bonus draws."""
+        lg = logits.astype(jnp.float32).reshape(logits.shape[0], -1)
+        greedy = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+        def draw(rid, ngen, row, temp):
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.fold_in(base_key, rid), ngen),
+                salt)
             return jax.random.categorical(key, row / jnp.maximum(temp, 1e-6))
 
         sampled = jax.vmap(draw)(rids, ngens, lg, temps).astype(jnp.int32)
@@ -426,9 +504,12 @@ class ServeEngine:
         plen = len(r.prompt)
         if self.cfg.family == "vlm":
             plen += self.cfg.n_vis_tokens  # vis tokens occupy cache lines
-        assert plen + r.max_new_tokens <= self.cache_len, (
+        # spec rounds write up to spec_k speculative lines past the
+        # committed region before the accept decision rolls pos back, so a
+        # spec engine reserves that headroom in every slot
+        assert plen + r.max_new_tokens + self.spec_k <= self.cache_len, (
             f"request {r.rid}: prompt {plen} + max_new {r.max_new_tokens} "
-            f"exceeds cache_len {self.cache_len}")
+            f"+ spec_k {self.spec_k} exceeds cache_len {self.cache_len}")
         vis = plen - len(r.prompt)
         # paged cache: open the block table (allocating pages for the
         # prompt) and consult the prefix index. A hit restores the cached
@@ -463,6 +544,18 @@ class ServeEngine:
             # publish this prompt's full pages for future admissions
             cache = self._kv.insert_prefix(np.asarray(r.prompt, np.int32),
                                            r.rid, cache, slot_idx)
+        if self.spec_k:
+            # the draft keeps its own slot-resident K/V lines (never
+            # page-accounted: the page pool tracks committed TARGET lines
+            # only) and always prefills the full prompt — it has no prefix
+            # store, and its first-token logits are discarded (the first
+            # token comes from the target, the bit-exactness contract)
+            dpad = self._bucket_len(len(r.prompt), self.cache_len)
+            dtoks = np.zeros((1, dpad), np.int32)
+            dtoks[0, : len(r.prompt)] = r.prompt
+            _, self._draft_cache = self._draft_prefill(
+                self.draft_params, self._draft_cache, np.int32(slot_idx),
+                {"tokens": jnp.asarray(dtoks)}, np.int32(plen))
         slot = _Slot(rid=r.rid, temperature=r.temperature,
                      remaining=r.max_new_tokens, n_gen=0, prompt_len=plen,
                      t_enqueue=t_enqueue, t_admit=t_admit, t_first=0.0)
@@ -499,6 +592,15 @@ class ServeEngine:
                 cache_len=self.cache_len, page_size=self.kv_page_size,
                 n_pages=self.kv_pages, kv_dtype=self.kv_dtype,
                 prefix_reuse=self.prefix_reuse)
+        self._draft_cache = None
+        if self.spec_k:
+            dc = self.draft_model.init_cache(self.max_batch, self.cache_len)
+            dc["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
+            self._draft_cache = dc
+        self._spec_inflight = {}
+        self._spec = {"proposed": 0, "accepted": 0, "rejected": 0,
+                      "bonus": 0, "tokens_emitted": 0, "verify_steps": 0,
+                      "draft_steps": 0}
         self._cur = np.zeros((self.max_batch, 1), np.int32)
         self._n_steps = 0          # global batched decode steps
         self._n_prefills = 0
@@ -599,6 +701,8 @@ class ServeEngine:
         if not any(s is not None for s in self._slots):
             return StepReport(admitted=admitted, finished=finished,
                               decoded=0, queue_depth=len(self._queue))
+        if self.spec_k:
+            return self._spec_round(admitted, finished)
         active = np.array([s is not None for s in self._slots])
         logits, self._cache = self._decode(self.params, self._cache,
                                            jnp.asarray(self._cur),
@@ -626,6 +730,104 @@ class ServeEngine:
                           decoded=int(active.sum()),
                           queue_depth=len(self._queue))
 
+    def _spec_round(self, admitted: List[int], finished: List[int]
+                    ) -> StepReport:
+        """One speculative scheduler round (replaces the plain batched
+        decode when spec_k > 0): propose spec_k draft candidates per
+        active slot, verify them all plus the committed current token in
+        ONE target forward, accept host-side (serve/spec.py), then roll
+        every slot's cache position back to its last accepted line.
+
+        Position contract: a round starts with both caches' pos at the
+        committed offset P = prompt_len + n_gen - 1 (cur's line unwritten,
+        the plain-decode invariant). Propose advances the draft to
+        P + spec_k + 1 (spec_k candidate feeds plus one catch-up feed that
+        writes the last candidate's line — needed only on a full accept);
+        verify advances the target to the speculated tip P + spec_k + 1.
+        After accepting a tokens (+1 correction or bonus), BOTH roll back
+        to P + a + 1. Rejected candidates' lines stay in the buffer beyond
+        the committed region: invisible (cache_len masking) and
+        overwritten by the step that first reaches them."""
+        from repro.serve import spec as spec_lib
+        k = self.spec_k
+        active = np.array([s is not None for s in self._slots])
+        act_j = jnp.asarray(active)
+        n_active = int(active.sum())
+        temps = np.array([s.temperature if s else 0.0 for s in self._slots],
+                         np.float32)
+        rids = np.array([s.rid if s else -1 for s in self._slots], np.int32)
+        base_gen = np.array([s.n_gen if s else 0 for s in self._slots],
+                            np.int32)
+        # ---- propose: k sequential draft steps + the catch-up feed
+        draft_toks = np.zeros((self.max_batch, k), np.int32)
+        draft_logits = np.zeros((self.max_batch, k, self.cfg.vocab_size),
+                                np.float32)
+        feed = jnp.asarray(self._cur)
+        for j in range(k):
+            dlg, self._draft_cache = self._draft_decode(
+                self.draft_params, self._draft_cache, feed, act_j)
+            toks = np.asarray(self._spec_sample(
+                dlg, jnp.asarray(temps), self.rng, jnp.asarray(rids),
+                jnp.asarray(base_gen + j),
+                jnp.int32(spec_lib.SALT_DRAFT)))
+            draft_toks[:, j] = toks
+            draft_logits[:, j] = np.asarray(dlg[:, 0], np.float32)
+            feed = jnp.asarray(toks[:, None])
+        _, self._draft_cache = self._draft_decode(
+            self.draft_params, self._draft_cache, feed, act_j)
+        # ---- verify: one (k+1)-position target forward over
+        # [cur, d_0..d_{k-1}]; device pos advances to the speculated tip,
+        # recorded in _spec_inflight so a mid-verify eviction (a fenced
+        # replica) can roll back to the last accepted line
+        for i, s in enumerate(self._slots):
+            if s is not None:
+                self._spec_inflight[i] = s.prompt_len + s.n_gen - 1
+        vtoks = np.concatenate([self._cur, draft_toks], axis=1)
+        vlg, self._cache = self._verify(self.params, self._cache,
+                                        jnp.asarray(vtoks), act_j)
+        vlg = np.asarray(vlg, np.float32)
+        self._n_steps += 1
+        self._slot_steps_active += n_active
+        self._spec["verify_steps"] += n_active
+        self._spec["draft_steps"] += n_active * (k + 1)
+        self._spec["proposed"] += n_active * k
+        # ---- accept + commit (host), then roll positions back
+        new_pos = np.asarray(self._cache["pos"]).copy()
+        draft_pos = np.asarray(self._draft_cache["pos"]).copy()
+        for i, s in enumerate(self._slots):
+            if s is None:
+                continue
+            emitted, kinds = spec_lib.accept_tokens(
+                draft_toks[i], draft_logits[i], vlg[i],
+                temperature=s.temperature, base_key=self.rng, rid=s.rid,
+                n_gen=s.n_gen)
+            # cap at the request budget; counters follow the kept tokens
+            # so accepted + rejected + bonus == tokens_emitted survives
+            m = min(len(emitted), s.remaining)
+            emitted, kinds = emitted[:m], kinds[:m]
+            self._out[s.rid].extend(emitted)
+            self._cur[i, 0] = emitted[-1]
+            s.n_gen += m
+            s.remaining -= m
+            s.decode_steps += 1
+            for kind in kinds:
+                self._spec[kind] += 1
+            self._spec["tokens_emitted"] += m
+            committed = s.prompt_len + s.n_gen - 1
+            new_pos[i] = committed
+            draft_pos[i] = committed
+            if self._kv is not None:
+                # page accounting covers committed lines only — the
+                # speculative tip is never page-backed
+                self._kv.grow(s.rid, s.prompt_len + s.n_gen)
+            self._spec_inflight.pop(i, None)
+            if s.remaining <= 0:
+                finished.append(self._finish(i))
+        self._cache["pos"] = jnp.asarray(new_pos)
+        self._draft_cache["pos"] = jnp.asarray(draft_pos)
+        return StepReport(admitted=admitted, finished=finished,
+                          decoded=n_active, queue_depth=len(self._queue))
+
     def evict_inflight(self, rids: Optional[Iterable[int]] = None
                        ) -> Tuple[List[Request], int]:
         """Pull unfinished requests (occupied slots first, then the
@@ -644,13 +846,29 @@ class ServeEngine:
         identical to an undisturbed run (the chaos-tier contract).
         Returns (evicted requests, tokens thrown away). The evicted
         slots' cache rows need no scrubbing: a freed slot's pos is held
-        (its rows are masked) until the next admission overwrites them."""
+        (its rows are masked) until the next admission overwrites them —
+        PROVIDED the held pos never overstates the row's committed
+        content. A spec engine evicted mid-verify violates that (device
+        pos sits at the speculated tip), so spec slots roll back to the
+        last ACCEPTED line here."""
         target = None if rids is None else set(rids)
         evicted: List[Request] = []
         wasted = 0
         for i, s in enumerate(self._slots):
             if s is None or (target is not None and s.rid not in target):
                 continue
+            if self.spec_k and self._cache is not None:
+                # mid-verify eviction: roll the slot back to the last
+                # accepted token, never the speculated tip (regression:
+                # tests/test_spec_decode.py). _spec_inflight holds the
+                # committed offset recorded at verify launch; outside a
+                # round it is empty and the fallback equals device pos.
+                committed = self._spec_inflight.pop(
+                    i, s.prompt_len + s.n_gen - 1)
+                self._cache["pos"] = \
+                    self._cache["pos"].at[i].set(committed)
+                self._draft_cache["pos"] = \
+                    self._draft_cache["pos"].at[i].set(committed)
             evicted.append(self._reqs.pop(s.rid))
             wasted += len(self._out.pop(s.rid, []))
             self._t_enq.pop(s.rid, None)
@@ -694,6 +912,16 @@ class ServeEngine:
             # merged here (not in aggregate_engine_stats, whose schema is
             # pinned by tests/test_serve_stats.py)
             engine_stats["kvcache"] = self._kv.stats()
+        if self.spec_k and self._spec is not None:
+            # same pattern as kvcache: merged outside the pinned schema
+            sp: Dict[str, Any] = dict(self._spec)
+            sp["k"] = self.spec_k
+            sp["acceptance_rate"] = (sp["accepted"] / sp["proposed"]
+                                     if sp["proposed"] else 0.0)
+            sp["accepted_tokens_per_step"] = (
+                sp["tokens_emitted"] / sp["verify_steps"]
+                if sp["verify_steps"] else 0.0)
+            engine_stats["spec"] = sp
         self.last_stats = engine_stats
         return engine_stats
 

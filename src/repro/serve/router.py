@@ -281,6 +281,19 @@ def _fold_kv(acc: Dict[str, Any], kv: Optional[Dict[str, Any]]) -> None:
         acc[k] = max(acc.get(k, 0), kv.get(k, 0))
 
 
+# speculative-decoding counters: all plain sums across incarnations (the
+# derived rates are recomputed from the folded sums at aggregation)
+_SPEC_SUM = ("proposed", "accepted", "rejected", "bonus", "tokens_emitted",
+             "verify_steps", "draft_steps")
+
+
+def _fold_spec(acc: Dict[str, Any], sp: Optional[Dict[str, Any]]) -> None:
+    if not sp:
+        return
+    for k in _SPEC_SUM:
+        acc[k] = acc.get(k, 0) + sp.get(k, 0)
+
+
 @dataclasses.dataclass
 class _Replica:
     idx: int
@@ -301,6 +314,7 @@ class _Replica:
     hist_decode_steps: int = 0
     hist_prefills: int = 0
     hist_kv: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    hist_spec: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def healthy_at(self, tick: int) -> bool:
         """Whether the replica PROCESS runs this tick (steps + beats) —
@@ -322,6 +336,13 @@ class _Replica:
         off)."""
         acc = dict(self.hist_kv)
         _fold_kv(acc, (self.engine.last_stats or {}).get("kvcache"))
+        return acc
+
+    def total_spec(self) -> Dict[str, Any]:
+        """Replica-lifetime speculative-decoding counters ({} when spec
+        is off)."""
+        acc = dict(self.hist_spec)
+        _fold_spec(acc, (self.engine.last_stats or {}).get("spec"))
         return acc
 
 
@@ -373,7 +394,8 @@ class Router:
                  kv_page_size: int = 0,
                  kv_pages: Optional[int] = None,
                  kv_dtype: str = "bf16",
-                 prefix_reuse: bool = True):
+                 prefix_reuse: bool = True,
+                 draft_cfg=None, draft_params=None, spec_k: int = 0):
         if replicas < 1:
             raise ValueError(f"need at least one replica, got {replicas}")
         if shed_policy not in ("reject-newest", "reject-oldest"):
@@ -395,6 +417,7 @@ class Router:
         self.retry_backoff_cap = retry_backoff_cap
         self.overload = overload
         self.kv_page_size = kv_page_size
+        self.spec_k = spec_k
         hb_dir = heartbeat_dir or tempfile.mkdtemp(prefix="repro-router-hb-")
         self.heartbeat_dir = hb_dir
         self.replicas: List[_Replica] = []
@@ -402,11 +425,17 @@ class Router:
             # kv knobs pass straight through: each replica owns its OWN
             # page pool and prefix index (replica-local reuse — a shared
             # prompt prefills once per replica, not once per fleet)
+            # spec knobs pass straight through too: the draft params are
+            # shared (read-only) but each replica owns its draft cache,
+            # and the salted key schedule makes a re-queued request's
+            # draws identical on any replica
             eng = ServeEngine(cfg, params, max_batch=max_batch,
                               cache_len=cache_len, rng_seed=rng_seed,
                               mesh=mesh, kv_page_size=kv_page_size,
                               kv_pages=kv_pages, kv_dtype=kv_dtype,
-                              prefix_reuse=prefix_reuse)
+                              prefix_reuse=prefix_reuse,
+                              draft_cfg=draft_cfg,
+                              draft_params=draft_params, spec_k=spec_k)
             rep = _Replica(
                 idx=i, engine=eng,
                 hb=HeartbeatFile(hb_dir, name=f"REPLICA_{i}"),
@@ -466,6 +495,7 @@ class Router:
         rep.hist_decode_steps += st["decode_steps"]
         rep.hist_prefills += st["prefills"]
         _fold_kv(rep.hist_kv, st.get("kvcache"))
+        _fold_spec(rep.hist_spec, st.get("spec"))
         rep.engine.reset()
         was_fenced = not rep.alive
         gap = tick - rep.fenced_at if (was_fenced and rep.fenced_at >= 0) \
@@ -499,6 +529,7 @@ class Router:
             rep.hist_decode_steps = 0
             rep.hist_prefills = 0
             rep.hist_kv = {}
+            rep.hist_spec = {}
         t_wall0 = time.perf_counter()
         ov = self.overload
 
@@ -834,6 +865,23 @@ class Router:
                                    / acc.get("n_pages", 1)
                                    if acc.get("n_pages") else 0.0),
             }
+        if self.spec_k:
+            # fleet view of speculative decoding: rates recomputed from
+            # the folded sums (never averaged across replicas)
+            sacc: Dict[str, Any] = {}
+            for r in self.replicas:
+                _fold_spec(sacc, r.total_spec() or None)
+            proposed = sacc.get("proposed", 0)
+            vsteps = sacc.get("verify_steps", 0)
+            stats["spec"] = {
+                **sacc,
+                "k": self.spec_k,
+                "acceptance_rate": (sacc.get("accepted", 0) / proposed
+                                    if proposed else 0.0),
+                "accepted_tokens_per_step": (
+                    sacc.get("tokens_emitted", 0) / vsteps
+                    if vsteps else 0.0),
+            }
         bt = trace.burst_ticks(tick_s, ticks)
         if bt:
             burst_toks = sum(toks_at_tick[k] for k in bt
@@ -865,6 +913,13 @@ class Router:
                 row["prefix_hit_rate"] = (row["prefix_hits"] / lk
                                           if lk else 0.0)
                 row["peak_live_pages"] = kv.get("peak_live_pages", 0)
+        if self.spec_k:
+            for row, r in zip(stats["per_replica"], self.replicas):
+                sp = r.total_spec()
+                prop = sp.get("proposed", 0)
+                row["spec_accepted"] = sp.get("accepted", 0)
+                row["spec_acceptance_rate"] = (row["spec_accepted"] / prop
+                                               if prop else 0.0)
         return stats
 
 

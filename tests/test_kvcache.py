@@ -289,9 +289,9 @@ def _example():
 
 def test_paged_kernel_registered_with_versions():
     ks = api.get_kernel("paged_decode")
-    assert ks.versions == ("ref", "gather", "int8")
+    assert ks.versions == ("ref", "gather", "int8", "verify")
     assert ks.default_version == "gather"
-    assert set(ks.tunable) == {"gather", "int8"}
+    assert set(ks.tunable) == {"gather", "int8", "verify"}
     assert "paged_decode" in api.list_kernels()
 
 

@@ -180,3 +180,44 @@ def test_paged_chaos_conserves_pages_and_stays_bit_exact(small, baseline,
     kv = stats["kvcache"]
     assert kv["pages_allocated"] >= kv["pages_freed"]
     assert kv["pages_allocated"] > 0
+
+
+def test_spec_chaos_flap_mid_verify_stays_bit_exact(small, baseline,
+                                                    tmp_path):
+    """Chaos + speculative decoding + paging: a replica flap while every
+    engine runs spec rounds over a paged target cache. Fencing can land
+    between a verify launch and its accept, so this scenario leans on the
+    evict_inflight rollback (device pos back to the last COMMITTED token,
+    draft cache included) — a re-queued request must restart clean on a
+    survivor and, at temperature 0, the fleet output must still match the
+    undisturbed PLAIN single-engine baseline token-for-token (spec is
+    scheduling, never numerics). Page conservation must hold with draft
+    K/V lines in play (slot-resident, never page-accounted)."""
+    cfg, params = small
+    dcfg = reduce_config(get_config("qwen2-1.5b"), layers=1, d_model=64,
+                         vocab=128)
+    dparams = build_model(dcfg).init_params(jax.random.PRNGKey(1))
+    trace, base_out = baseline
+    rt = Router(cfg, params, replicas=2, max_batch=2, cache_len=64,
+                rng_seed=0, heartbeat_dir=str(tmp_path),
+                stale_after_ticks=2, kv_page_size=8,
+                draft_cfg=dcfg, draft_params=dparams, spec_k=2,
+                fault_plan=FaultPlan().flap(1, at_tick=3, down_ticks=4))
+    out, stats = rt.run(trace)
+    assert stats["completed"] == TRACE.n_requests
+    _assert_no_drop_no_dup(trace, out)
+    assert out == base_out                     # spec failover bit-exact
+    for rep in rt.replicas:
+        rep.engine.kv.check_conservation()
+        assert rep.engine.kv.pages_live == rep.engine.kv._index_pages
+    # fleet spec stats fold across the recovery reset and keep the
+    # accounting identity; the flapped replica's wasted rounds inflate
+    # proposed, never tokens_emitted
+    sp = stats["spec"]
+    assert sp["k"] == 2
+    assert sp["accepted"] + sp["rejected"] + sp["bonus"] \
+        == sp["tokens_emitted"]
+    assert sp["tokens_emitted"] > 0
+    assert 0.0 <= sp["acceptance_rate"] <= 1.0
+    assert all("spec_acceptance_rate" in row
+               for row in stats["per_replica"])
